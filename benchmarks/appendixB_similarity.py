@@ -1,0 +1,89 @@
+"""Appendix B analog: residual-block similarity — the empirical
+justification for layer grafting.
+
+The paper's core argument (B.2) is *functional*: swapping residual blocks
+barely changes the output, i.e. f_r(x) ≈ f_{r+1}(x) on the same input.
+For CNN filters it proxies this with matched-PCC of 3x3 weight maps; for
+transformer blocks (d_model-sized rows) raw weight PCC of independently
+initialized matrices is ~0 by construction, so we measure the functional
+quantity directly: cosine similarity between consecutive blocks' residual
+updates f_r(x_r) and f_{r+1}(x_r) evaluated on the SAME stream state —
+exactly the substitution grafting performs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+def block_functional_similarity(params, cfg, batch, seed=0) -> float:
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as model_mod
+    from repro.models.masks import full_masks
+    from repro.models.transformer import _block_apply
+
+    m = full_masks(cfg)
+    x = model_mod._embed(params, cfg, batch["tokens"], m)
+    positions = jnp.arange(x.shape[1])[None]
+    st = params["stages"][0]
+    R = cfg.stages()[0][1]
+    gate = jnp.ones((), jnp.float32)
+    sims = []
+    for r in range(R):
+        p_r = jax.tree.map(lambda t: t[r], st)
+        deltas = []
+        for rr in (r, min(r + 1, R - 1)):
+            p_rr = jax.tree.map(lambda t: t[rr], st)
+            y, _, _ = _block_apply(cfg.pattern_unit[0], p_rr[0], x, cfg, m,
+                                   gate=gate, positions=positions,
+                                   window=cfg.attn_window)
+            deltas.append((y - x).astype(jnp.float32).reshape(-1))
+        if r + 1 < R:
+            a, b = deltas
+            sims.append(float(a @ b / (jnp.linalg.norm(a) * jnp.linalg.norm(b)
+                                       + 1e-9)))
+        # advance the stream with block r
+        y, _, _ = _block_apply(cfg.pattern_unit[0], p_r[0], x, cfg, m,
+                               gate=gate, positions=positions,
+                               window=cfg.attn_window)
+        x = y
+    return float(np.mean(sims))
+
+
+def run(quick: bool = True, out: str = "results/appendixB.json",
+        seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.data import synthetic
+    from repro.launch.steps import make_train_step
+    from repro.models import model as model_mod
+    from repro.optim import init_opt
+
+    cfg = get_arch("smollm-135m").reduced().replace(
+        vocab_size=128, n_layers=4, n_sections=1)
+    steps = 60 if quick else 300
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    data = synthetic.lm_stream(cfg.vocab_size, steps * 4 + 8, 32, seed=seed)
+    batch0 = {"tokens": jnp.asarray(data[-8:])}
+    res = {"epoch0": {"functional_cos": block_functional_similarity(
+        params, cfg, batch0, seed)}}
+    opt = init_opt(params, "sgd")
+    step = jax.jit(make_train_step(cfg, total_steps=steps))
+    for s in range(steps):
+        toks = jnp.asarray(data[s * 4:(s + 1) * 4])
+        params, opt, _ = step(params, opt, {"tokens": toks}, jnp.asarray(s + 1))
+    res["trained"] = {"functional_cos": block_functional_similarity(
+        params, cfg, batch0, seed)}
+    print("residual-update similarity cos(f_r(x), f_{r+1}(x)):", res)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    run()

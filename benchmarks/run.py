@@ -1,0 +1,127 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+benchmark payload; derived = the table's headline metric).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def bench_table1(quick=True):
+    from benchmarks import table1_robustness
+    t0 = time.time()
+    res = table1_robustness.run(quick=quick)
+    drops_fedfa = [v for k, v in res.items() if "/drop/fedfa" in k]
+    drops_base = [v for k, v in res.items()
+                  if "/drop/" in k and not k.endswith("fedfa")]
+    d = (f"fedfa_mean_drop={sum(drops_fedfa)/len(drops_fedfa):.3f};"
+         f"baseline_mean_drop={sum(drops_base)/len(drops_base):.3f}")
+    _row("table1_robustness", (time.time() - t0) * 1e6, d)
+
+
+def bench_table2():
+    from benchmarks import table2_macs
+    t0 = time.time()
+    res = table2_macs.run()
+    _row("table2_macs", (time.time() - t0) * 1e6,
+         f"avg_TMACs_both={res['both']['avg_TMACs']:.4f}")
+
+
+def bench_table3(quick=True):
+    from benchmarks import table3_perplexity
+    t0 = time.time()
+    res = table3_perplexity.run(quick=quick)
+    fed = sum(v for k, v in res.items() if "/fedfa" in k) / 3
+    base = sum(v for k, v in res.items() if "/fedfa" not in k) / 3
+    _row("table3_perplexity", (time.time() - t0) * 1e6,
+         f"fedfa_ppl={fed:.1f};baseline_ppl={base:.1f}")
+
+
+def bench_table10(quick=True):
+    from benchmarks import table10_scale_variation
+    t0 = time.time()
+    res = table10_scale_variation.run(quick=quick)
+    ratios = [v["dist_over_baseline_mag"] for k, v in res.items()
+              if "dist_over_baseline_mag" in v]
+    _row("table10_scale_variation", (time.time() - t0) * 1e6,
+         f"dist_ratio_range={min(ratios):.2f}-{max(ratios):.2f}")
+
+
+def bench_appendixB(quick=True):
+    from benchmarks import appendixB_similarity
+    t0 = time.time()
+    res = appendixB_similarity.run(quick=quick)
+    _row("appendixB_similarity", (time.time() - t0) * 1e6,
+         f"cos_init={res['epoch0']['functional_cos']:.3f};"
+         f"cos_trained={res['trained']['functional_cos']:.3f}")
+
+
+def bench_kernels():
+    """Micro-bench the attention oracle (CPU wall time — indicative only;
+    the Pallas kernels target TPU and are validated in interpret mode)."""
+    import jax
+    from repro.kernels.flash_attention import ref as fa_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 512, 4, 64))
+    k = jax.random.normal(ks[1], (2, 512, 2, 64))
+    v = jax.random.normal(ks[2], (2, 512, 2, 64))
+    f = jax.jit(lambda q, k, v: fa_ref.attention_ref(q, k, v))
+    f(q, k, v).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        f(q, k, v).block_until_ready()
+    _row("kernel_attention_ref_cpu", (time.time() - t0) / 5 * 1e6, "oracle")
+
+
+def bench_aggregation():
+    """Server aggregation throughput (params/s) at CPU scale."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core import fedfa
+    from repro.models import model as model_mod
+    from repro.models.masks import full_client, stack_masks
+    cfg = get_arch("smollm-135m").reduced()
+    p = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    m = 8
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * m), p)
+    fc = full_client(cfg)
+    masks = stack_masks([fc.masks(cfg)] * m)
+    gates = jnp.stack([fc.gates(cfg)] * m)
+    gmaps = jnp.stack([fc.graft(cfg)] * m)
+    nd = jnp.ones((m,))
+    f = jax.jit(lambda g, s: fedfa.aggregate(g, s, cfg, masks, gates, gmaps,
+                                             nd, graft=True, scale=True))
+    jax.block_until_ready(f(p, stacked))
+    n_params = sum(x.size for x in jax.tree.leaves(p))
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(f(p, stacked))
+    dt = (time.time() - t0) / 3
+    _row("fedfa_aggregate_8clients", dt * 1e6,
+         f"params_per_s={m*n_params/dt:.2e}")
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    os.makedirs("results", exist_ok=True)
+    print("name,us_per_call,derived")
+    bench_table2()
+    bench_table10(quick)
+    bench_appendixB(quick)
+    bench_kernels()
+    bench_aggregation()
+    bench_table3(quick)
+    bench_table1(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from results/dryrun and results/roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = ["minicpm-2b", "smollm-135m", "arctic-480b", "recurrentgemma-2b",
+              "mamba2-130m", "tinyllama-1.1b", "phi3.5-moe-42b-a6.6b",
+              "internvl2-76b", "codeqwen1.5-7b", "whisper-base"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}" if isinstance(x, (int, float)) else "-"
+
+
+def _ms(x):
+    return f"{x*1e3:.2f}" if isinstance(x, (int, float)) else "-"
+
+
+def dryrun_table(mesh: str, d: str = "results/dryrun") -> str:
+    rows = [f"| arch | shape | status | peak GB/dev | HLO GFLOP/dev | "
+            f"coll MB/dev | compile s |",
+            "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPES:
+            f = os.path.join(d, f"{a}_{s}_{mesh}.json")
+            if not os.path.exists(f):
+                continue
+            r = json.load(open(f))
+            if r["status"] == "skipped":
+                rows.append(f"| {a} | {s} | skipped (see DESIGN.md) | - | - | - | - |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | ERROR | - | - | - | - |")
+                continue
+            mem = r["memory"].get("peak_bytes")
+            fl = r.get("cost", {}).get("flops", 0)
+            co = r["collectives"].get("total", 0)
+            rows.append(
+                f"| {a} | {s} | ok | {_gb(mem)} | {fl/1e9:.1f} | "
+                f"{co/2**20:.1f} | {r['lower_compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh: str = "16x16", d: str = "results/roofline") -> str:
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | "
+            "bottleneck | MODEL_FLOPs/HLO | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPES:
+            f = os.path.join(d, f"{a}_{s}_{mesh}.json")
+            if not os.path.exists(f):
+                continue
+            r = json.load(open(f))
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | - | - | - | {r['status']} | - | - |")
+                continue
+            t = r["terms"]
+            ratio = r.get("useful_flops_ratio")
+            rows.append(
+                f"| {a} | {s} | {_ms(t['compute_s'])} | {_ms(t['memory_s'])} "
+                f"| {_ms(t['collective_s'])} | {r['bottleneck'].replace('_s','')} "
+                f"| {ratio:.2f} | {r['what_would_move_it'][:60]} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### 16x16\n")
+        print(dryrun_table("16x16"))
+        print("\n### 2x16x16\n")
+        print(dryrun_table("2x16x16"))
+    if which in ("all", "roofline"):
+        print("\n### roofline\n")
+        print(roofline_table())

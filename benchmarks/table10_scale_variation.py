@@ -1,0 +1,79 @@
+"""Table 10 / Appendix F analog: scale variations across architectures of
+different depth/width — the empirical motivation for scalable aggregation.
+Trains a baseline + depth/width variants briefly on identical data and
+reports first/last-layer average weight magnitudes and distances."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+
+def _avg_mag(leaf):
+    return float(np.mean(np.abs(np.asarray(leaf, np.float32))))
+
+
+def run(quick: bool = True, out: str = "results/table10.json",
+        seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.data import synthetic
+    from repro.launch.steps import make_train_step
+    from repro.models import model as model_mod
+    from repro.optim import init_opt
+
+    base = get_arch("smollm-135m").reduced().replace(
+        vocab_size=128, n_layers=2, n_sections=1)
+    steps = 30 if quick else 200
+    variants = {
+        "baseline": base,
+        "deeper+2": base.replace(n_layers=4),
+        "deeper+4": base.replace(n_layers=6),
+        "wider1.25x": base.replace(d_ff=int(base.d_ff * 1.25) // 8 * 8),
+        "wider1.5x": base.replace(d_ff=int(base.d_ff * 1.5) // 8 * 8),
+    }
+    data = synthetic.lm_stream(base.vocab_size, steps * 4, 32, seed=seed)
+    res = {}
+    weights = {}
+    for vi, (name, cfg) in enumerate(variants.items()):
+        # each architecture trains from its own initialization (paper
+        # Appendix F: independently trained models of different complexity)
+        params = model_mod.init_params(cfg, jax.random.PRNGKey(seed + 101 * vi))
+        opt = init_opt(params, "sgd")
+        step = jax.jit(make_train_step(cfg, total_steps=steps))
+        for s in range(steps):
+            toks = jnp.asarray(data[s * 4:(s + 1) * 4])
+            params, opt, _ = step(params, opt, {"tokens": toks},
+                                  jnp.asarray(s + 1))
+        first = params["stages"][0][0]["attn"]["wq"][0]
+        last = params["stages"][0][0]["ffn"]["w_down"][-1]
+        weights[name] = (np.asarray(first), np.asarray(last))
+        res[name] = dict(first_layer_mag=_avg_mag(first),
+                         last_layer_mag=_avg_mag(last))
+    bf, bl = weights["baseline"]
+    for name in variants:
+        if name == "baseline":
+            continue
+        f, l = weights[name]
+        # compare common parts only (HeteroFL/NeFL contiguous structured
+        # pruning, paper Appendix F): slice wider variants to the baseline's
+        # leading channels.
+        fc = f[tuple(slice(0, d) for d in bf.shape)]
+        lc = l[tuple(slice(0, d) for d in bl.shape)]
+        res[name]["first_layer_dist"] = float(np.mean(np.abs(fc - bf)))
+        res[name]["last_layer_dist"] = float(np.mean(np.abs(lc - bl)))
+        res[name]["dist_over_baseline_mag"] = round(
+            res[name]["first_layer_dist"] / res["baseline"]["first_layer_mag"], 3)
+        print(f"{name:12s} mag={res[name]['first_layer_mag']:.4f} "
+              f"dist={res[name]['first_layer_dist']:.4f} "
+              f"ratio={res[name]['dist_over_baseline_mag']}")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    run()

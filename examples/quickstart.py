@@ -1,0 +1,54 @@
+"""Quickstart: one heterogeneous FedFA round end to end, on CPU.
+
+Four clients pick different widths/depths, train locally on synthetic
+non-IID data, the server grafts + scale-aggregates, and we inspect the
+result.  ~30s on a laptop.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.server import ClientSpec, FLConfig, fl_round
+from repro.data import synthetic
+from repro.models import model as model_mod
+from repro.models.masks import ClientArch
+
+# 1) global architecture: a reduced SmolLM-family decoder (2 sections)
+cfg = get_arch("smollm-135m").reduced().replace(
+    n_layers=4, n_sections=2, vocab_size=64)
+params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+print(f"global model: {cfg.n_layers} layers, d_model={cfg.d_model}, "
+      f"{sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params")
+
+# 2) clients choose architectures for their budget (Alg. 1 line 2)
+specs = [
+    ClientSpec(arch=ClientArch(0.25, (1, 1)), n_data=120),   # tiny phone
+    ClientSpec(arch=ClientArch(0.5, (1, 2)), n_data=200),    # tablet
+    ClientSpec(arch=ClientArch(0.75, (2, 1)), n_data=160),   # laptop
+    ClientSpec(arch=ClientArch(1.0, (2, 2)), n_data=240),    # server
+]
+
+# 3) local data (synthetic LM streams; each client its own domain)
+E, B, S = 2, 4, 32
+toks = np.stack([
+    synthetic.lm_stream(cfg.vocab_size, E * B, S, seed=i).reshape(E, B, S)
+    for i in range(len(specs))])
+batches = {"tokens": jnp.asarray(toks)}
+
+# 4) one FedFA round: local updates -> graft -> scale -> aggregate
+fl = FLConfig(local_steps=E, lr=0.05, strategy="fedfa", task="lm")
+new_params, mean_loss = fl_round(params, cfg, fl, specs, batches,
+                                 jax.random.PRNGKey(1))
+print(f"round done; mean local loss {float(mean_loss):.3f}")
+
+# 5) the global model changed everywhere (complete aggregation) ...
+delta = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     new_params, params)
+wq = new_params["stages"][0][0]["attn"]["wq"]
+print("max |delta| embed:", delta["embed"])
+print("depth slot 1 was missing from 3 of 4 clients, but grafting kept it "
+      f"fully aggregated: |wq[1]-old| = "
+      f"{float(jnp.abs(wq[1]-params['stages'][0][0]['attn']['wq'][1]).max()):.4f}")

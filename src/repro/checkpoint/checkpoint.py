@@ -1,0 +1,42 @@
+"""Self-contained pytree checkpointing (npz payload + json structure)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path, keystr
+
+
+def _pathstr(path) -> str:
+    return keystr(path)
+
+
+def save(path: str, tree: Any, meta: Dict[str, Any] | None = None) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = tree_flatten_with_path(tree)[0]
+    names = [_pathstr(p) for p, _ in flat]
+    arrays = {f"a{i}": np.asarray(l) for i, (_, l) in enumerate(flat)}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump({"names": names, "meta": meta or {}}, f)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path + ".json") as f:
+        spec = json.load(f)
+    data = np.load(path + ".npz")
+    flat = tree_flatten_with_path(like)[0]
+    names = [_pathstr(p) for p, _ in flat]
+    assert names == spec["names"], "checkpoint/tree structure mismatch"
+    leaves = []
+    for i, (_, l) in enumerate(flat):
+        a = data[f"a{i}"]
+        assert tuple(a.shape) == tuple(np.shape(l)), f"shape mismatch at {names[i]}"
+        leaves.append(jax.numpy.asarray(a, dtype=l.dtype))
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves), spec["meta"]

@@ -1,0 +1,4 @@
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES, MoEConfig,
+                                SSMConfig, RGLRUConfig, EncoderConfig, VisionConfig,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.configs.registry import ARCHS, ASSIGNED, get_arch

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch arctic_480b)."""
+from repro.configs.registry import ARCTIC_480B as CONFIG
+
+__all__ = ["CONFIG"]

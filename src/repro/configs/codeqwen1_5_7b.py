@@ -1,0 +1,4 @@
+"""Selectable config module (--arch codeqwen1_5_7b)."""
+from repro.configs.registry import CODEQWEN_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch fedfa_paper)."""
+from repro.configs.registry import FEDFA_PAPER_TRANSFORMER as CONFIG
+
+__all__ = ["CONFIG"]

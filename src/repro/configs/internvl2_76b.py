@@ -1,0 +1,4 @@
+"""Selectable config module (--arch internvl2_76b)."""
+from repro.configs.registry import INTERNVL2_76B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch mamba2_130m)."""
+from repro.configs.registry import MAMBA2_130M as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch minicpm_2b)."""
+from repro.configs.registry import MINICPM_2B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch phi35_moe)."""
+from repro.configs.registry import PHI35_MOE as CONFIG
+
+__all__ = ["CONFIG"]

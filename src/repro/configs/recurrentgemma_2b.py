@@ -1,0 +1,4 @@
+"""Selectable config module (--arch recurrentgemma_2b)."""
+from repro.configs.registry import RECURRENTGEMMA_2B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch smollm_135m)."""
+from repro.configs.registry import SMOLLM_135M as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch tinyllama_1_1b)."""
+from repro.configs.registry import TINYLLAMA_1B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Selectable config module (--arch whisper_base)."""
+from repro.configs.registry import WHISPER_BASE as CONFIG
+
+__all__ = ["CONFIG"]

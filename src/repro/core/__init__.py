@@ -1,0 +1,1 @@
+from repro.core import fedfa, masking, client, server, attacks, nas

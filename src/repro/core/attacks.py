@@ -1,0 +1,39 @@
+"""Backdoor attack model (paper §3.1, Eq. 1).
+
+ΔM_malicious = ΔM_c + λ·ΔM_backdoor — the malicious client submits its
+honest update plus λ times a backdoor delta obtained by training on
+label-shuffled data (paper §5.1: "random shuffling of the data labels").
+Attackers select the *largest* architecture (paper §3.1), which is why
+incomplete aggregation is exploitable and grafting closes the hole.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def shuffle_labels(batches, key, task: str = "lm"):
+    """Poisoned copy of the local batches with permuted labels."""
+    if task == "cls":
+        labels = batches["labels"]                     # (E, B)
+        flat = labels.reshape(-1)
+        perm = jax.random.permutation(key, flat.shape[0])
+        return dict(batches, labels=flat[perm].reshape(labels.shape))
+    toks = batches["tokens"]                           # (E, B, S)
+    flat = toks.reshape(-1)
+    perm = jax.random.permutation(key, flat.shape[0])
+    return dict(batches, tokens=flat[perm].reshape(toks.shape))
+
+
+def combine_malicious(global_params: Params, honest: Params,
+                      backdoored: Params, lam: float) -> Params:
+    """M_global + ΔM_c + λ·ΔM_backdoor (Eq. 1)."""
+    def f(g, h, b):
+        gf = g.astype(jnp.float32)
+        return (gf + (h.astype(jnp.float32) - gf)
+                + lam * (b.astype(jnp.float32) - gf)).astype(g.dtype)
+    return jax.tree.map(f, global_params, honest, backdoored)

@@ -1,0 +1,51 @@
+"""Client-side local update (Alg. 1 line 9, LocalUpdate).
+
+Runs E local steps of SGD+momentum (paper Table 6) on the client's masked
+sub-model.  Gradients are projected back onto the client subspace after
+each step (defensive — masked forwards already produce zero grads outside
+it) so padded-dense simulation stays exactly on the small-model manifold.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.masking import apply_mask_tree, axis_mask_tree
+from repro.models import model as model_mod
+from repro.models.masks import WidthMasks
+from repro.optim import init_opt, opt_update
+
+Params = Dict[str, Any]
+
+
+def local_update(global_params: Params, cfg: ArchConfig, batches, *,
+                 masks: WidthMasks, gates: jax.Array,
+                 lr: float, task: str = "lm",
+                 class_mask: Optional[jax.Array] = None,
+                 optimizer: Optional[str] = None,
+                 momentum: float = 0.9, weight_decay: float = 1e-4) -> Params:
+    """batches: pytree with leading step axis, e.g. {'tokens': (E, B, S)}.
+    Returns the client's updated (masked) model."""
+    ax = axis_mask_tree(cfg, masks)
+    params = apply_mask_tree(global_params, ax)        # Alg. 3: distribution
+    opt_name = optimizer or cfg.optimizer
+    opt = init_opt(params, opt_name)
+
+    def step(carry, batch):
+        p, st = carry
+        (_, _metrics), grads = jax.value_and_grad(
+            model_mod.loss_fn, has_aux=True)(
+                p, cfg, batch, masks=masks, gates=gates, task=task,
+                class_mask=class_mask)
+        grads = apply_mask_tree(grads, ax)
+        p, st = opt_update(opt_name, p, grads, st, lr,
+                           **({"momentum": momentum, "weight_decay": weight_decay}
+                              if opt_name == "sgd" else {}))
+        p = apply_mask_tree(p, ax)                     # weight decay drift guard
+        return (p, st), _metrics["loss"]
+
+    (params, _), losses = jax.lax.scan(step, (params, opt), batches)
+    return params, losses

@@ -1,0 +1,204 @@
+"""FedFA server-side machinery: layer grafting (Alg. 2), global model
+distribution (Alg. 3), and scalable aggregation (Alg. 1).
+
+Memory-conscious design: the accumulation over clients runs as a
+``lax.scan`` with (M', γ) carry — only two global-model-sized buffers live
+at once regardless of cohort size — and the per-client trimmed-norm pass is
+a separate scan.  Under pjit with the client axis sharded over the mesh's
+``data`` axis the scans become the server's collective reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import tree_map_with_path
+
+from repro.configs.base import ArchConfig
+from repro.core.masking import (AX, active_fraction, apply_mask_tree,
+                                axis_mask_tree, mask_density)
+from repro.models.masks import WidthMasks
+
+Params = Dict[str, Any]
+_IS_AX = lambda x: isinstance(x, AX)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 — layer grafting (gather along the repeat axis)
+# ---------------------------------------------------------------------------
+
+def graft_stage0(params: Params, graft_map: jax.Array) -> Params:
+    """Replicate the last active block of each section into missing slots."""
+    st = params["stages"]
+    s0 = jax.tree.map(lambda x: jnp.take(x, graft_map, axis=0), st[0])
+    return dict(params, stages=(s0,) + tuple(st[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 — global model distribution (width masking; depth via gates)
+# ---------------------------------------------------------------------------
+
+def extract_client_model(global_params: Params, cfg: ArchConfig,
+                         masks: WidthMasks) -> Params:
+    """Server -> client: zero channels outside the client's width. Depth
+    reduction is positional (clients run the first d_s blocks per section),
+    so no parameter surgery is needed beyond the width mask."""
+    return apply_mask_tree(global_params, axis_mask_tree(cfg, masks))
+
+
+# ---------------------------------------------------------------------------
+# §4.3 — trimmed norms and scaling factors
+# ---------------------------------------------------------------------------
+
+def _path_stage_info(path) -> Tuple[bool, Optional[int]]:
+    """(is_depth_stacked, stage_index or None for encoder blocks)."""
+    def key_of(e):
+        return getattr(e, "key", getattr(e, "idx", None))
+    k0 = key_of(path[0])
+    if k0 == "stages":
+        return True, key_of(path[1])
+    if k0 == "encoder" and key_of(path[1]) == "blocks":
+        return True, None
+    return False, None
+
+
+def trimmed_sq_norms(params: Params, axtree: Params, trim: float = 0.95) -> Params:
+    """Per-layer L2 norm of weights with |w| below the ``trim`` quantile.
+
+    Masked (inactive) entries are excluded from the quantile by shifting the
+    quantile level: with active fraction f, the ``trim`` quantile of active
+    magnitudes equals the ``1 - (1-trim)*f`` quantile of the zero-padded
+    tensor.  Returns (R,) per depth-stacked leaf, scalar otherwise.
+    """
+    def f(path, w, ax):
+        fa = active_fraction(ax)
+        q = 1.0 - (1.0 - trim) * fa
+        stacked, _ = _path_stage_info(path)
+        lead = w.shape[0] if stacked else 1
+        wf = jnp.abs(w.reshape(lead, -1).astype(jnp.float32))
+        t = jnp.quantile(wf, q, axis=-1, keepdims=True)
+        ss = jnp.sum(jnp.where(wf <= t, wf * wf, 0.0), axis=-1)
+        n = jnp.sqrt(ss)
+        return n if stacked else n[0]
+    return tree_map_with_path(f, params, axtree, is_leaf=_IS_AX)
+
+
+def scaling_factors(norms_stacked: Params, eps: float = 1e-12) -> Params:
+    """α_c^(l) = mean_κ ||M95,κ^(l)|| / ||M95,c^(l)|| from stacked norms
+    (leading axis = clients)."""
+    def f(n):
+        mean = jnp.mean(n, axis=0, keepdims=True)
+        return mean / jnp.maximum(n, eps)
+    return jax.tree.map(f, norms_stacked)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — aggregation
+# ---------------------------------------------------------------------------
+
+def _weighted_contribution(cfg: ArchConfig, p_c: Params, masks_c: WidthMasks,
+                           gmap_c, gate_c, nd_c, alpha_c: Optional[Params],
+                           graft: bool):
+    """One client's (N_c·α_c·M_c, N_c·mask) pair, fully masked/grafted."""
+    ax = axis_mask_tree(cfg, masks_c)
+    if graft:
+        p_c = graft_stage0(p_c, gmap_c)
+        depthw = jnp.ones_like(gate_c)
+    else:
+        depthw = gate_c
+
+    def depth_weight(path, w):
+        stacked, stage = _path_stage_info(path)
+        if stacked and stage == 0:
+            return depthw.reshape((-1,) + (1,) * (w.ndim - 1))
+        return jnp.ones((), jnp.float32)
+
+    def f_contrib(path, w, axl, al):
+        wf = w.astype(jnp.float32) * mask_density(w.shape, axl)
+        if al is not None:
+            a = al.reshape(al.shape + (1,) * (w.ndim - al.ndim))
+            wf = wf * a
+        return nd_c * depth_weight(path, w) * wf
+
+    def f_gamma(path, w, axl):
+        dens = mask_density(w.shape, axl)
+        return (nd_c * depth_weight(path, w) * dens) * jnp.ones(w.shape, jnp.float32)
+
+    if alpha_c is None:
+        contrib = tree_map_with_path(
+            lambda pth, w, axl: f_contrib(pth, w, axl, None),
+            p_c, ax, is_leaf=_IS_AX)
+    else:
+        contrib = tree_map_with_path(f_contrib, p_c, ax, alpha_c, is_leaf=_IS_AX)
+    gamma = tree_map_with_path(f_gamma, p_c, ax, is_leaf=_IS_AX)
+    return contrib, gamma
+
+
+def aggregate(global_params: Params, stacked_params: Params, cfg: ArchConfig,
+              masks: WidthMasks, gates: jax.Array, gmaps: jax.Array,
+              n_data: jax.Array, *, graft: bool = True, scale: bool = True,
+              trim: float = 0.95, eps: float = 1e-12) -> Params:
+    """FedFA Alg. 1 lines 11-24 (graft=scale=True) and the partial-
+    aggregation baselines HeteroFL/FlexiFed/NeFL (graft=scale=False).
+
+    stacked_params / masks / gates / gmaps / n_data carry a leading client
+    axis m.  Returns the new global model; elements no client updated keep
+    their previous global value (γ = 0 case).
+    """
+    alphas = None
+    if scale:
+        def norm_body(_, xs):
+            p_c, mk_c, gm_c = xs
+            ax = axis_mask_tree(cfg, mk_c)
+            p = graft_stage0(p_c, gm_c) if graft else p_c
+            p = apply_mask_tree(p, ax)
+            return _, trimmed_sq_norms(p, ax, trim)
+        _, norms = jax.lax.scan(norm_body, None, (stacked_params, masks, gmaps))
+        alphas = scaling_factors(norms, eps)
+
+    def acc_body(carry, xs):
+        Mp, Gm = carry
+        if scale:
+            p_c, mk_c, gm_c, gate_c, nd_c, al_c = xs
+        else:
+            p_c, mk_c, gm_c, gate_c, nd_c = xs
+            al_c = None
+        contrib, gamma = _weighted_contribution(
+            cfg, p_c, mk_c, gm_c, gate_c, nd_c, al_c, graft)
+        Mp = jax.tree.map(jnp.add, Mp, contrib)
+        Gm = jax.tree.map(jnp.add, Gm, gamma)
+        return (Mp, Gm), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                         jax.tree.map(lambda x: x[0], stacked_params))
+    xs = (stacked_params, masks, gmaps, gates, n_data)
+    if scale:
+        xs = xs + (alphas,)
+    (Mp, Gm), _ = jax.lax.scan(acc_body, (zeros, zeros), xs)
+
+    def finish(g_old, mp, gm):
+        upd = mp / jnp.maximum(gm, eps)
+        return jnp.where(gm > 0, upd, g_old.astype(jnp.float32)).astype(g_old.dtype)
+    return jax.tree.map(finish, global_params, Mp, Gm)
+
+
+# Strategy presets ----------------------------------------------------------
+
+STRATEGIES = {
+    # paper's method, all three flexibility modes share the same aggregation
+    "fedfa": dict(graft=True, scale=True),
+    # prior work: partial (incomplete) aggregation, no grafting, no scaling
+    "heterofl": dict(graft=False, scale=False),
+    "flexifed": dict(graft=False, scale=False),
+    "nefl": dict(graft=False, scale=False),
+    "fedavg": dict(graft=False, scale=False),
+    # ablations
+    "fedfa-graft-only": dict(graft=True, scale=False),
+    "fedfa-scale-only": dict(graft=False, scale=True),
+}
+
+
+def aggregate_strategy(name: str, *args, **kw) -> Params:
+    return aggregate(*args, **STRATEGIES[name], **kw)

@@ -1,0 +1,186 @@
+"""Axis-mask trees: map FedFA width masks onto every parameter tensor.
+
+For each parameter leaf we record which of its *trailing* axes carries
+which width mask (``AX(row_mask, col_mask, ...)`` aligned to the last
+``len(ms)`` axes, so depth-stacked leaves with a leading repeat axis R
+broadcast automatically).  This single structure drives:
+
+  * extraction / distribution (Alg. 3): ``apply_mask_tree``
+  * gradient projection during local training
+  * the per-element γ counts of the aggregation (Alg. 1 line 20)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.masks import WidthMasks
+
+Params = Dict[str, Any]
+
+
+class AX:
+    """Per-leaf axis masks aligned to the last len(ms) axes.
+
+    Unregistered class => treated as a single leaf by jax.tree.map, which is
+    exactly what we need when zipping against the params tree.
+    """
+    __slots__ = ("ms",)
+
+    def __init__(self, *ms):
+        self.ms = ms
+
+    def __repr__(self):
+        return f"AX({','.join('None' if m is None else str(m.shape) for m in self.ms)})"
+
+
+def _rep(mask: Optional[jax.Array], k: int) -> Optional[jax.Array]:
+    return None if mask is None else jnp.repeat(mask, k)
+
+
+def _norm_ax(cfg: ArchConfig, dm) -> Dict[str, AX]:
+    if cfg.norm == "layernorm":
+        return {"scale": AX(dm), "bias": AX(dm)}
+    return {"scale": AX(dm)}
+
+
+def _attn_ax(cfg: ArchConfig, m: WidthMasks) -> Dict[str, AX]:
+    hd = cfg.head_dim
+    h = _rep(m.heads, hd)
+    kv = _rep(m.kv_heads, hd)
+    return {"wq": AX(m.d_model, h), "wk": AX(m.d_model, kv),
+            "wv": AX(m.d_model, kv), "wo": AX(h, m.d_model)}
+
+
+def _ffn_ax(cfg: ArchConfig, m: WidthMasks) -> Dict[str, AX]:
+    if cfg.norm == "layernorm":
+        return {"w_in": AX(m.d_model, m.d_ff), "b_in": AX(m.d_ff),
+                "w_out": AX(m.d_ff, m.d_model), "b_out": AX(m.d_model)}
+    return {"w_gate": AX(m.d_model, m.d_ff), "w_up": AX(m.d_model, m.d_ff),
+            "w_down": AX(m.d_ff, m.d_model)}
+
+
+def _moe_ax(cfg: ArchConfig, m: WidthMasks) -> Dict[str, AX]:
+    p = {"router": AX(m.d_model, m.experts),
+         "w_gate": AX(m.experts, m.d_model, None),
+         "w_up": AX(m.experts, m.d_model, None),
+         "w_down": AX(m.experts, None, m.d_model)}
+    if cfg.moe.dense_residual:
+        p["dense"] = {"w_gate": AX(m.d_model, m.d_ff),
+                      "w_up": AX(m.d_model, m.d_ff),
+                      "w_down": AX(m.d_ff, m.d_model)}
+    return p
+
+
+def _ssd_ax(cfg: ArchConfig, m: WidthMasks) -> Dict[str, AX]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    N, nh, hp = s.d_state, s.n_heads(cfg.d_model), s.head_dim
+    inner = _rep(m.ssm_heads, hp)
+    ones_n = jnp.ones((N,), jnp.float32)
+    if inner is None:
+        proj_col = conv_col = None
+    else:
+        proj_col = jnp.concatenate([inner, inner, ones_n, ones_n, m.ssm_heads])
+        conv_col = jnp.concatenate([inner, ones_n, ones_n])
+    return {"in_proj": AX(m.d_model, proj_col),
+            "conv_w": AX(None, conv_col), "conv_b": AX(conv_col),
+            "A_log": AX(m.ssm_heads), "D": AX(m.ssm_heads),
+            "dt_bias": AX(m.ssm_heads), "norm": AX(inner),
+            "out_proj": AX(inner, m.d_model)}
+
+
+def _rglru_ax(cfg: ArchConfig, m: WidthMasks) -> Dict[str, AX]:
+    dr = m.d_rnn
+    return {"in_x": AX(m.d_model, dr), "in_gate": AX(m.d_model, dr),
+            "conv_w": AX(None, dr), "conv_b": AX(dr),
+            "w_r": AX(dr, dr), "b_r": AX(dr), "w_i": AX(dr, dr),
+            "b_i": AX(dr), "lam": AX(dr), "out": AX(dr, m.d_model)}
+
+
+def _block_ax(kind: str, cfg: ArchConfig, m: WidthMasks, cross: bool) -> Dict[str, Any]:
+    if kind == "attn":
+        p = {"ln1": _norm_ax(cfg, m.d_model), "attn": _attn_ax(cfg, m),
+             "ln2": _norm_ax(cfg, m.d_model),
+             "ffn": _moe_ax(cfg, m) if cfg.moe else _ffn_ax(cfg, m)}
+        if cross:
+            p["lnx"] = _norm_ax(cfg, m.d_model)
+            p["xattn"] = _attn_ax(cfg, m)
+        return p
+    if kind == "ssd":
+        return {"ln": _norm_ax(cfg, m.d_model), "ssd": _ssd_ax(cfg, m)}
+    if kind == "rglru":
+        return {"ln1": _norm_ax(cfg, m.d_model), "rg": _rglru_ax(cfg, m),
+                "ln2": _norm_ax(cfg, m.d_model), "ffn": _ffn_ax(cfg, m)}
+    raise ValueError(kind)
+
+
+def axis_mask_tree(cfg: ArchConfig, m: WidthMasks) -> Params:
+    """Tree matching init_params structure; leaves are AX objects."""
+    cross = cfg.encoder is not None
+    t: Params = {"embed": AX(None, m.d_model)}
+    stages = []
+    for unit, reps in cfg.stages():
+        stages.append(tuple(_block_ax(k, cfg, m, cross) for k in unit))
+    t["stages"] = tuple(stages)
+    t["final_norm"] = _norm_ax(cfg, m.d_model)
+    if not cfg.tie_embeddings:
+        t["lm_head"] = AX(m.d_model, None)
+    if cfg.rope_theta <= 0.0:
+        t["pos_embed"] = AX(None, m.d_model)
+    if cfg.vision is not None:
+        t["projector"] = {"w1": AX(None, m.d_model),
+                          "w2": AX(m.d_model, m.d_model)}
+    if cfg.encoder is not None:
+        t["encoder"] = {"blocks": _block_ax("attn", cfg, m, cross=False),
+                        "final_norm": _norm_ax(cfg, m.d_model)}
+    return t
+
+
+def _apply_ax(leaf: jax.Array, ax: AX) -> jax.Array:
+    out = leaf
+    n = len(ax.ms)
+    for i, mv in enumerate(ax.ms):
+        if mv is None:
+            continue
+        shape = [1] * out.ndim
+        shape[out.ndim - n + i] = mv.shape[0]
+        out = out * mv.reshape(shape).astype(out.dtype)
+    return out
+
+
+def apply_mask_tree(params: Params, axtree: Params) -> Params:
+    """Extraction / distribution (Alg. 3 width step): zero masked channels."""
+    return jax.tree.map(_apply_ax, params, axtree,
+                        is_leaf=lambda x: isinstance(x, AX))
+
+
+def mask_density(leaf_shape: Tuple[int, ...], ax: AX):
+    """Fraction + per-element mask broadcast product for γ accounting."""
+    out = jnp.ones((), jnp.float32)
+    n = len(ax.ms)
+    for i, mv in enumerate(ax.ms):
+        if mv is None:
+            continue
+        shape = [1] * len(leaf_shape)
+        shape[len(leaf_shape) - n + i] = mv.shape[0]
+        out = out * mv.reshape(shape)
+    return out
+
+
+def active_fraction(ax: AX) -> jax.Array:
+    """Product of per-axis active fractions (scalar, traced-safe)."""
+    f = jnp.ones((), jnp.float32)
+    for mv in ax.ms:
+        if mv is not None:
+            f = f * jnp.mean(mv)
+    return f
+
+
+def mask_gradients(grads: Params, axtree: Params) -> Params:
+    """Project gradients back onto the client's subspace (defensive; the
+    masked forward already yields zero grads outside it)."""
+    return apply_mask_tree(grads, axtree)

@@ -1,0 +1,97 @@
+"""Client-side architecture selection: ZiCo-style zero-shot NAS
+(Li et al., arXiv:2301.11300 — paper §5.1) + a small evolutionary search.
+
+ZiCo proxy: sum over layers of log(E|g| / std|g|) where the statistics of
+per-parameter absolute gradients are taken across a few minibatches —
+higher inverse coefficient of variation correlates with trainability.
+Only forward+backward passes are needed (cost-effective, per the paper).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.masking import apply_mask_tree, axis_mask_tree
+from repro.models import model as model_mod
+from repro.models.masks import ClientArch, max_section_depths
+
+
+def zico_score(cfg: ArchConfig, arch: ClientArch, params, batches,
+               task: str = "lm") -> float:
+    """batches: pytree with leading axis = number of probe minibatches."""
+    masks = arch.masks(cfg)
+    gates = arch.gates(cfg)
+    ax = axis_mask_tree(cfg, masks)
+    p = apply_mask_tree(params, ax)
+
+    def gradfn(batch):
+        g = jax.grad(lambda pp: model_mod.loss_fn(
+            pp, cfg, batch, masks=masks, gates=gates, task=task)[0])(p)
+        return apply_mask_tree(g, ax)
+
+    grads = jax.lax.map(gradfn, batches)               # leading axis = probes
+    score = jnp.zeros((), jnp.float32)
+    for g in jax.tree.leaves(grads):
+        ga = jnp.abs(g.astype(jnp.float32))
+        mean = jnp.mean(ga, axis=0)                    # across probe batches
+        std = jnp.std(ga, axis=0) + 1e-9
+        # only count active entries (mean>0 under masks)
+        ratio = jnp.where(mean > 0, mean / std, 0.0)
+        denom = jnp.maximum(jnp.sum(mean > 0), 1)
+        score = score + jnp.log(jnp.sum(ratio) / denom + 1e-9)
+    return float(score)
+
+
+@dataclass
+class SearchSpace:
+    width_mults: Tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+    # per-section depth choices are 1..max implicitly
+
+
+def random_arch(cfg: ArchConfig, space: SearchSpace, rng: np.random.Generator) -> ClientArch:
+    maxd = max_section_depths(cfg)
+    w = float(rng.choice(space.width_mults))
+    d = tuple(int(rng.integers(1, m + 1)) for m in maxd)
+    return ClientArch(w, d)
+
+
+def mutate(cfg: ArchConfig, arch: ClientArch, space: SearchSpace,
+           rng: np.random.Generator) -> ClientArch:
+    maxd = max_section_depths(cfg)
+    w = arch.width_mult
+    d = list(arch.section_depths)
+    if rng.random() < 0.5:
+        ws = list(space.width_mults)
+        i = ws.index(min(ws, key=lambda v: abs(v - w)))
+        i = int(np.clip(i + rng.choice([-1, 1]), 0, len(ws) - 1))
+        w = ws[i]
+    else:
+        s = int(rng.integers(len(d)))
+        d[s] = int(np.clip(d[s] + rng.choice([-1, 1]), 1, maxd[s]))
+    return ClientArch(float(w), tuple(d))
+
+
+def evolutionary_search(cfg: ArchConfig, params, batches, *,
+                        task: str = "lm", space: SearchSpace = SearchSpace(),
+                        population: int = 8, generations: int = 3,
+                        seed: int = 0) -> ClientArch:
+    """ZiCo-guided evolutionary search (paper §5.1: clients pick local
+    architectures with ZiCo over the candidate grid of Table 5)."""
+    rng = np.random.default_rng(seed)
+    pop = [random_arch(cfg, space, rng) for _ in range(population)]
+    scored = [(zico_score(cfg, a, params, batches, task), a) for a in pop]
+    for _ in range(generations):
+        scored.sort(key=lambda t: -t[0])
+        parents = [a for _, a in scored[: max(2, population // 2)]]
+        children = [mutate(cfg, parents[int(rng.integers(len(parents)))], space, rng)
+                    for _ in range(population - len(parents))]
+        scored = scored[: len(parents)] + [
+            (zico_score(cfg, a, params, batches, task), a) for a in children]
+    scored.sort(key=lambda t: -t[0])
+    return scored[0][1]

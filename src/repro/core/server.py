@@ -1,0 +1,148 @@
+"""Federated server: round orchestration (Alg. 1 lines 4-25).
+
+The round is one SPMD program: selected clients' runtimes (width masks,
+depth gates, graft maps, data counts, class masks, malicious flags) are
+stacked along a leading client axis, local training is vmapped over it, and
+aggregation scans over it.  Under pjit the client axis is sharded over the
+mesh's ``data`` axis (see repro.launch.train).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import attacks as attacks_mod
+from repro.core import fedfa
+from repro.core.client import local_update
+from repro.models.masks import (ClientArch, WidthMasks, full_client,
+                                max_section_depths, stack_masks)
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class ClientSpec:
+    arch: ClientArch
+    n_data: int
+    malicious: bool = False
+    class_mask: Optional[np.ndarray] = None   # (V,) non-IID logit zeroing
+
+
+@dataclass
+class FLConfig:
+    participation: float = 0.1          # C
+    local_steps: int = 5                # E (steps == epochs on synthetic data)
+    lr: float = 0.01
+    attack_lambda: float = 1.0          # λ in Eq. 1
+    strategy: str = "fedfa"
+    task: str = "lm"
+    trim: float = 0.95
+    seed: int = 0
+
+
+def select_clients(n_clients: int, frac: float, rng: np.random.Generator) -> np.ndarray:
+    m = max(1, int(round(frac * n_clients)))
+    return rng.choice(n_clients, size=m, replace=False)
+
+
+def stack_runtimes(cfg: ArchConfig, specs: Sequence[ClientSpec]):
+    masks = stack_masks([s.arch.masks(cfg) for s in specs])
+    gates = jnp.stack([s.arch.gates(cfg) for s in specs])
+    gmaps = jnp.stack([s.arch.graft(cfg) for s in specs])
+    nd = jnp.asarray([float(s.n_data) for s in specs], jnp.float32)
+    cms = None
+    if any(s.class_mask is not None for s in specs):
+        V = cfg.padded_vocab
+        cms = jnp.stack([
+            jnp.asarray(s.class_mask if s.class_mask is not None
+                        else np.ones(V, np.float32)) for s in specs])
+    mal = jnp.asarray([s.malicious for s in specs], jnp.float32)
+    return masks, gates, gmaps, nd, cms, mal
+
+
+def fl_round(global_params: Params, cfg: ArchConfig, fl: FLConfig,
+             specs: Sequence[ClientSpec], client_batches, key,
+             *, any_malicious: Optional[bool] = None) -> Tuple[Params, jax.Array]:
+    """One synchronized round over the given (already selected) clients.
+
+    client_batches: pytree with leading axes (m, E, B, ...) — per-client
+    local datasets for E local steps.  Returns (new_global, mean local loss).
+    """
+    masks, gates, gmaps, nd, cms, mal = stack_runtimes(cfg, specs)
+    if any_malicious is None:
+        any_malicious = any(s.malicious for s in specs)
+
+    def train_one(mk, gt, batches, cm, mal_flag, k):
+        honest, losses = local_update(
+            global_params, cfg, batches, masks=mk, gates=gt, lr=fl.lr,
+            task=fl.task, class_mask=cm, optimizer=cfg.optimizer,
+            momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+        if any_malicious:
+            poisoned = attacks_mod.shuffle_labels(batches, k, fl.task)
+            bad, _ = local_update(
+                global_params, cfg, poisoned, masks=mk, gates=gt, lr=fl.lr,
+                task=fl.task, class_mask=cm, optimizer=cfg.optimizer,
+                momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+            attacked = attacks_mod.combine_malicious(
+                global_params, honest, bad, fl.attack_lambda)
+            out = jax.tree.map(
+                lambda h, a: jnp.where(mal_flag > 0, a, h), honest, attacked)
+        else:
+            out = honest
+        return out, jnp.mean(losses)
+
+    m = nd.shape[0]
+    keys = jax.random.split(key, m)
+    cms_in = cms if cms is not None else jnp.ones((m, cfg.padded_vocab), jnp.float32) \
+        if fl.task == "cls" else None
+    if cms_in is None:
+        updated, losses = jax.vmap(
+            lambda mk, gt, b, fl_, k: train_one(mk, gt, b, None, fl_, k)
+        )(masks, gates, client_batches, mal, keys)
+    else:
+        updated, losses = jax.vmap(train_one)(
+            masks, gates, client_batches, cms_in, mal, keys)
+
+    new_global = fedfa.aggregate_strategy(
+        fl.strategy, global_params, updated, cfg, masks, gates, gmaps, nd,
+        trim=fl.trim)
+    return new_global, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# Scenario helpers (paper §5.1 experimental setup)
+# ---------------------------------------------------------------------------
+
+def make_client_specs(cfg: ArchConfig, n_clients: int, *,
+                      archs: Sequence[ClientArch],
+                      malicious_frac: float = 0.0,
+                      n_data_range: Tuple[int, int] = (100, 250),
+                      class_masks: Optional[Sequence[np.ndarray]] = None,
+                      seed: int = 0) -> List[ClientSpec]:
+    """Half the clients take the smallest architecture (paper §5.1), the
+    rest get the supplied (e.g. NAS-chosen) architectures; attackers use the
+    largest architecture (paper §3.1)."""
+    rng = np.random.default_rng(seed)
+    smallest = min(archs, key=lambda a: (a.width_mult, sum(a.section_depths)))
+    n_mal = int(round(malicious_frac * n_clients))
+    mal_ids = set(rng.choice(n_clients, size=n_mal, replace=False).tolist()) \
+        if n_mal else set()
+    specs = []
+    for i in range(n_clients):
+        if i in mal_ids:
+            arch = full_client(cfg)                    # largest architecture
+        elif i % 2 == 0:
+            arch = smallest
+        else:
+            arch = archs[int(rng.integers(len(archs)))]
+        specs.append(ClientSpec(
+            arch=arch,
+            n_data=int(rng.integers(*n_data_range)),
+            malicious=i in mal_ids,
+            class_mask=None if class_masks is None else class_masks[i]))
+    return specs

@@ -1,0 +1,53 @@
+"""jit'd wrappers for the FedFA aggregation kernels (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedfa_agg import ref
+from repro.kernels.fedfa_agg.kernel import scaled_accum, trimmed_sumsq
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def trimmed_norm(w_flat: jax.Array, thresh: jax.Array, *,
+                 use_kernel=None, interpret=False) -> jax.Array:
+    """sqrt(Σ w²·[|w|<=t]) over a flat vector, any length (zero-padded)."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not (use_kernel or interpret):
+        return jnp.sqrt(ref.trimmed_sumsq_ref(w_flat, thresh))
+    lanes = 128
+    n = w_flat.size
+    padded = ((n + lanes - 1) // lanes) * lanes
+    rows = padded // lanes
+    block = min(2048, rows)
+    rows_p = ((rows + block - 1) // block) * block
+    w2 = jnp.zeros((rows_p * lanes,), w_flat.dtype).at[:n].set(w_flat)
+    # padding zeros pass |0|<=t -> contribute 0 to the sum: safe.
+    ss = trimmed_sumsq(w2.reshape(rows_p, lanes), thresh, block=block,
+                       interpret=interpret or not _on_tpu())
+    return jnp.sqrt(ss)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
+               use_kernel=None, interpret=False) -> jax.Array:
+    """Fused Σ_c weights[c]·x[c]·mask over the client axis. x: (m, n)."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not (use_kernel or interpret):
+        return ref.scaled_accum_ref(x, weights, mask)
+    m, n = x.shape
+    block = 4096 if n >= 4096 else max(128, 1 << (n - 1).bit_length())
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, (0, pad))
+    out = scaled_accum(xp, weights, mp, block=block,
+                       interpret=interpret or not _on_tpu())
+    return out[:n]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracles for the FedFA aggregation kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def trimmed_sumsq_ref(w, thresh):
+    wf = w.astype(jnp.float32)
+    return jnp.sum(jnp.where(jnp.abs(wf) <= thresh, wf * wf, 0.0))
+
+
+def scaled_accum_ref(x, weights, mask):
+    xf = x.astype(jnp.float32)
+    return jnp.einsum("mn,m->n", xf, weights.astype(jnp.float32)) \
+        * mask.astype(jnp.float32)

@@ -1,0 +1,106 @@
+"""Blockwise (flash) causal GQA attention as a Pallas TPU kernel.
+
+Design for the TPU memory hierarchy:
+  * grid = (batch, q_heads, Sq/bq, Sk/bk); the innermost kv axis revisits the
+    same output block, carrying the online-softmax state (running max m,
+    denominator l, accumulator acc) in VMEM scratch across iterations.
+  * BlockSpec tiles: q (1, bq, 1, hd), k/v (1, bk, 1, hd) — hd is padded to a
+    multiple of 128 by the wrapper so the MXU matmuls are lane-aligned.
+  * GQA is expressed in the kv index_map (kv_head = q_head // group), so no
+    repeated-KV materialization ever reaches HBM.
+  * causal/window masking is applied in-kernel; fully-masked kv blocks are
+    cheap (masked to -inf, no branch divergence on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, bq: int, bk: int, causal: bool,
+                 window: Optional[int], nk: int, kv_len: int):
+    j = pl.program_id(3)
+    i = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale        # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = q @ k.T                                              # (bq, bk) MXU
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len                # exclude tile padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                      # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)             # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                           # (bq, 1)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128, kv_len: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H % K == 0.
+
+    Shapes must tile: Sq % bq == 0, Sk % bk == 0 (the ops.py wrapper pads).
+    ``kv_len``: true kv length before padding (padded slots masked out).
+    ``scale``: softmax scale; defaults to hd**-0.5 of the (padded) head dim —
+    pass the unpadded value when the wrapper pads hd.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    assert H % K == 0 and Sq % bq == 0 and Sk % bk == 0
+    group = H // K
+    nq, nk = Sq // bq, Sk // bk
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(_attn_kernel, scale=scale, bq=bq, bk=bk,
+                               causal=causal, window=window, nk=nk,
+                               kv_len=kv_len if kv_len is not None else Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // group, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

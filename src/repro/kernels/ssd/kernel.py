@@ -1,0 +1,81 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+TPU decomposition of the SSD algorithm: the *quadratic intra-chunk* term
+(C·Bᵀ masked-decay matmul) and the per-chunk state contribution are
+matmul-heavy — they run on the MXU inside this kernel — while the cheap
+sequential inter-chunk state carry stays in XLA (lax.scan in ops.py).
+
+Per grid point (one chunk × one head):
+  la = dt * A;  L = cumsum(la)
+  M[t,s] = (C_t·B_s) * exp(L_t - L_s) * dt_s   for s <= t
+  y_intra = M @ x                               (Q,hp)
+  state   = Σ_s exp(L_Q - L_s)·dt_s · B_s ⊗ x_s (hp,N)
+Exports L so ops.py can form y_inter = exp(L_t)·C_t·h0 and the decays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, st_ref, l_ref, *, Q: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, hp)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0, 0]                                  # scalar
+    B = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    C = c_ref[0].astype(jnp.float32)                 # (Q, N)
+
+    la = dt * A                                      # log a_t  (Q,)
+    L = jnp.cumsum(la)                               # (Q,)
+
+    CB = C @ B.T                                     # (Q, Q) MXU
+    diff = L[:, None] - L[None, :]
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = spos <= tpos
+    M = jnp.where(causal, CB * jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+    M = M * dt[None, :]
+    y_ref[0, :, 0, :] = (M @ x).astype(y_ref.dtype)  # (Q, hp) MXU
+
+    decay_end = jnp.exp(L[-1] - L)                   # (Q,)
+    dB = B * (dt * decay_end)[:, None]               # (Q, N)
+    st_ref[0, 0] = (x.T @ dB).astype(st_ref.dtype)   # (hp, N) MXU
+    l_ref[0, :, 0] = L.astype(l_ref.dtype)
+
+
+def ssd_intra_chunk(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array, *,
+                    interpret: bool = False):
+    """x: (G, Q, nh, hp); dt: (G, Q, nh); A: (nh,); B, C: (G, Q, N)
+    where G = batch * n_chunks.  Returns (y_intra, chunk_state, L):
+    (G,Q,nh,hp), (G,nh,hp,N), (G,Q,nh) — all fp32."""
+    G, Q, nh, hp = x.shape
+    N = B.shape[-1]
+    A2 = A.reshape(nh, 1).astype(jnp.float32)
+    kernel = functools.partial(_ssd_kernel, Q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(G, nh),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, hp), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda g, h: (g, 0, h)),
+            pl.BlockSpec((1, 1), lambda g, h: (h, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, hp), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, 1, hp, N), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda g, h: (g, 0, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((G, nh, hp, N), jnp.float32),
+            jax.ShapeDtypeStruct((G, Q, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A2, B, C)

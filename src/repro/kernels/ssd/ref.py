@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel + full chunked SSD."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(x, dt, A, B, C):
+    """Same contract as kernel.ssd_intra_chunk (G = batch*chunks)."""
+    G, Q, nh, hp = x.shape
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la = dtf * A[None, None, :]
+    L = jnp.cumsum(la, axis=1)                           # (G,Q,nh)
+    CB = jnp.einsum("gtn,gsn->gts", C.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    diff = L[:, :, None, :] - L[:, None, :, :]           # (G,t,s,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    M = jnp.where(causal, CB[..., None] * jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+    M = M * dtf[:, None, :, :]
+    y = jnp.einsum("gtsh,gshp->gthp", M, xf)
+    decay_end = jnp.exp(L[:, -1:, :] - L)                # (G,Q,nh)
+    dB = B.astype(jnp.float32)[:, :, None, :] * (dtf * decay_end)[..., None]
+    state = jnp.einsum("gshn,gshp->ghpn", dB, xf)
+    return y, state, L
+
+
+def ssd_full_ref(x, dt, A, B, C, chunk: int):
+    """Reference full SSD via repro.models.ssm (the model-side oracle)."""
+    from repro.models.ssm import ssd_chunked_ref
+    return ssd_chunked_ref(x, dt, A, B, C, chunk)

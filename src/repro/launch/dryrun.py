@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init.  512 placeholder host devices back the production
+# mesh; nothing is ever allocated (lower/compile only).
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_mod
+from repro.optim import init_opt
+from repro.sharding import hints
+from repro.sharding.specs import (batch_axes, batch_specs, cache_specs,
+                                  opt_state_specs, param_specs,
+                                  sanitize_specs)
+
+# TPU v5e hardware constants (single chip)
+HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))\S*\s+"
+    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in the partitioned HLO."""
+    out: Dict[str, int] = {}
+    for type_str, op in _COLL_RE.findall(hlo_text):
+        out[op] = out.get(op, 0) + _shape_bytes(type_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _shard(mesh, spec_tree, abstract_tree=None):
+    if abstract_tree is not None:
+        spec_tree = sanitize_specs(spec_tree, abstract_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16))
+
+
+def _long_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    if shape.name == "long_500k" and cfg.long_context_mode == "window":
+        return 4096
+    return None
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                save_hlo: Optional[str] = None,
+                override_cfg: Optional[ArchConfig] = None,
+                variant: str = "opt") -> Dict[str, Any]:
+    """variant='baseline': paper-faithful naive lowering (no vocab padding,
+    FSDP also while serving, no head padding).  variant='opt': the §Perf
+    optimized configuration."""
+    cfg = override_cfg or get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = dict(arch=arch, shape=shape_name, variant=variant,
+                               mesh="2x16x16" if multi_pod else "16x16")
+    if variant == "baseline":
+        cfg = cfg.replace(pad_vocab=False)
+
+    if shape.name == "long_500k" and cfg.long_context_mode == "skip":
+        rec["status"] = "skipped"
+        rec["reason"] = ("enc-dec ASR model: 524k-token autoregressive decode "
+                         "is not a meaningful workload (DESIGN.md)")
+        return rec
+
+    window = _long_window(cfg, shape)
+    serve = shape.kind in ("prefill", "decode")
+    masks = None
+    if serve and variant != "baseline":
+        from repro.sharding.padding import pad_heads_for_serving
+        cfg, masks = pad_heads_for_serving(cfg)
+        rec["head_padding"] = masks is not None
+    fsdp_flag = cfg.fsdp if (shape.kind == "train" or variant == "baseline") \
+        else cfg.serve_fsdp
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    pspecs = param_specs(cfg, fsdp=fsdp_flag, multi_pod=multi_pod)
+    params_abs = abstract_params(cfg)
+    pshard = _shard(mesh, pspecs, params_abs)
+    bspecs = batch_specs(cfg, multi_pod, shape.kind)
+    t0 = time.time()
+
+    with mesh:
+        pol = hints.megatron_policy(batch_axes(multi_pod))
+        with hints.policy(pol):
+            if shape.kind == "train":
+                step_fn = steps_mod.make_train_step(cfg)
+                mdt = jnp.bfloat16 if cfg.momentum_dtype == "bfloat16" \
+                    else jnp.float32
+                opt_abs = jax.eval_shape(
+                    lambda p: init_opt(p, cfg.optimizer, mdt), params_abs)
+                oshard = _shard(mesh, opt_state_specs(
+                    cfg, pspecs, cfg.optimizer == "adamw"), opt_abs)
+                batch_abs = steps_mod.input_specs(cfg, shape)
+                bshard = _shard(mesh, {k: bspecs[k] for k in batch_abs},
+                                batch_abs)
+                # donate params + optimizer state: new values alias the
+                # old buffers (true on TPU; CPU memory_analysis reports the
+                # aliased outputs under temp)
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, bshard, None),
+                    out_shardings=(pshard, oshard, None),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(
+                    params_abs, opt_abs, batch_abs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            elif shape.kind == "prefill":
+                step_fn = steps_mod.make_prefill_step(cfg, window=window,
+                                                      masks=masks)
+                batch_abs = steps_mod.input_specs(cfg, shape)
+                bshard = _shard(mesh, {k: bspecs[k] for k in batch_abs},
+                                batch_abs)
+                out_abs = jax.eval_shape(step_fn, params_abs, batch_abs)
+                b = batch_axes(multi_pod)
+                baxes = b if len(b) > 1 else b[0]
+                out_specs = (P(baxes, None, "model"),
+                             cache_specs(cfg, multi_pod))
+                if cfg.encoder is not None:
+                    out_specs = out_specs + (P(baxes, None, None),)
+                outs = _shard(mesh, out_specs, out_abs)
+                jitted = jax.jit(step_fn, in_shardings=(pshard, bshard),
+                                 out_shardings=outs)
+                lowered = jitted.lower(params_abs, batch_abs)
+            else:  # decode
+                step_fn = steps_mod.make_decode_step(cfg, window=window,
+                                                     masks=masks)
+                caches_abs = steps_mod.decode_cache_specs(cfg, shape, window=window)
+                cshard = _shard(mesh, cache_specs(cfg, multi_pod), caches_abs)
+                batch_abs = steps_mod.input_specs(cfg, shape)
+                b = batch_axes(multi_pod)
+                baxes = b if len(b) > 1 else b[0]
+                tshard = _shard(mesh, P(baxes, None), batch_abs["tokens"])
+                args = [params_abs, caches_abs, batch_abs["tokens"]]
+                in_sh = [pshard, cshard, tshard]
+                if cfg.encoder is not None:
+                    enc_abs = jax.ShapeDtypeStruct(
+                        (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                        jnp.bfloat16)
+                    args.append(enc_abs)
+                    in_sh.append(_shard(mesh, P(baxes, None, None), enc_abs))
+                out_abs = jax.eval_shape(step_fn, *args)
+                outs = _shard(mesh, (P(baxes, None, "model"),
+                                     cache_specs(cfg, multi_pod)), out_abs)
+                # donate the caches: in-place update halves serving memory
+                jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                                 out_shardings=outs, donate_argnums=(1,))
+                lowered = jitted.lower(*args)
+
+            compiled = lowered.compile()
+
+    rec["lower_compile_s"] = round(time.time() - t0, 1)
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = dict(
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            peak_bytes=(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+        )
+    except Exception as e:                            # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost"] = {k: ca.get(k) for k in
+                       ("flops", "bytes accessed", "transcendentals")
+                       if k in ca}
+    except Exception as e:                            # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    # Roofline terms.  compiled.cost_analysis() and the HLO module are
+    # PER-DEVICE after SPMD partitioning (verified: flops*chips ==
+    # 6*N*tokens for dense train steps), so the "/ chips" of the global
+    # formula is already applied; the per-chip peaks divide directly.
+    flops = float(rec.get("cost", {}).get("flops") or 0.0)
+    bytes_acc = float(rec.get("cost", {}).get("bytes accessed") or 0.0)
+    coll = float(rec["collectives"].get("total", 0))
+    mf = model_flops(cfg, shape)
+    rec["roofline"] = dict(
+        chips=chips,
+        compute_s=flops / HW["peak_flops"],
+        memory_s=bytes_acc / HW["hbm_bw"],
+        collective_s=coll / HW["ici_bw"],
+        model_flops=mf,
+        hlo_flops_global=flops * chips,
+        useful_flops_ratio=(mf / (flops * chips)) if flops else None,
+    )
+    terms = {k: rec["roofline"][k] for k in ("compute_s", "memory_s", "collective_s")}
+    rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--variant", default="opt", choices=["opt", "baseline"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [a for a in ARCHS if a != "fedfa-paper-transformer"] \
+        if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    for a in archs:
+        for s in shapes:
+            tag = f"{a}_{s}_{'2x16x16' if args.multi_pod else '16x16'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = lower_combo(a, s, multi_pod=args.multi_pod,
+                                  save_hlo=args.save_hlo,
+                                  variant=args.variant)
+            except Exception as e:
+                rec = dict(arch=a, shape=s, status="error",
+                           error=f"{type(e).__name__}: {e}",
+                           trace=traceback.format_exc()[-2000:])
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"  -> {rec['status']} "
+                  f"({rec.get('lower_compile_s', '-')}s; "
+                  f"mem={rec.get('memory', {}).get('peak_bytes', '-')}; "
+                  f"bottleneck={rec.get('roofline', {}).get('bottleneck', '-')})",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

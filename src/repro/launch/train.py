@@ -1,0 +1,220 @@
+"""Federated training driver.
+
+Two modes:
+  * ``--mode fl``     — the paper's workload: synthetic federated rounds with
+    heterogeneous client architectures, FedFA (or baseline) aggregation,
+    optional backdoor attackers.  This is what examples/ and benchmarks/
+    drive at CPU scale.
+  * ``--mode dense``  — plain distributed pretraining of one architecture
+    (the e2e driver for (b): train a ~100M model for a few hundred steps).
+
+For multi-host production the same functions are jitted with the meshes
+from repro.launch.mesh; on this container they run on CPU with a host mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def run_dense(arch: str, steps: int, batch: int, seq_len: int,
+              log_every: int = 10, reduced: bool = True,
+              seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.data import synthetic
+    from repro.launch.steps import make_train_step
+    from repro.models import model as model_mod
+    from repro.optim import init_opt
+
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(grad_accum=1)
+    key = jax.random.PRNGKey(seed)
+    params = model_mod.init_params(cfg, key)
+    opt = init_opt(params, cfg.optimizer)
+    step_fn = jax.jit(make_train_step(cfg, total_steps=steps))
+
+    data = synthetic.lm_stream(cfg.vocab_size, steps * batch, seq_len, seed=seed)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        tok = jnp.asarray(data[s * batch:(s + 1) * batch])
+        batch_d = {"tokens": tok}
+        if cfg.vision is not None:
+            batch_d["patches"] = 0.02 * jax.random.normal(
+                jax.random.fold_in(key, s),
+                (batch, cfg.vision.n_patches, cfg.vision.vit_dim))
+        if cfg.encoder is not None:
+            batch_d["frames"] = 0.02 * jax.random.normal(
+                jax.random.fold_in(key, s),
+                (batch, cfg.encoder.n_frames, cfg.d_model))
+        params, opt, loss = step_fn(params, opt, batch_d, jnp.asarray(s))
+        losses.append(float(loss))
+        if s % log_every == 0:
+            print(f"step {s:4d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time()-t0)/(s+1):.2f}s/step)", flush=True)
+    return {"arch": arch, "losses": losses,
+            "first": float(np.mean(losses[:5])),
+            "last": float(np.mean(losses[-5:]))}
+
+
+def client_arch_pool(cfg, mode: str, fracs=(0.25, 0.5, 0.75, 1.0)):
+    """Paper's three flexibility regimes: depth-only (vs FlexiFed),
+    width-only (vs HeteroFL), both (vs NeFL)."""
+    import numpy as np
+    from repro.models.masks import ClientArch, max_section_depths
+    maxd = max_section_depths(cfg)
+    depths = lambda f: tuple(max(1, int(np.ceil(f * m))) for m in maxd)
+    if mode == "width":
+        return [ClientArch(w, maxd) for w in fracs]
+    if mode == "depth":
+        return [ClientArch(1.0, depths(f)) for f in fracs]
+    pool = [ClientArch(w, depths(f)) for w, f in
+            [(0.25, 0.5), (0.5, 0.5), (0.5, 1.0), (0.75, 0.75), (1.0, 1.0)]]
+    return pool
+
+
+def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
+           malicious_frac: float = 0.0, attack_lambda: float = 1.0,
+           noniid: bool = False, local_steps: int = 2, batch: int = 4,
+           seq_len: int = 32, n_classes: int = 10, lr: float = 0.05,
+           participation: float = 0.5, seed: int = 0,
+           eval_every: int = 5, task: str = "cls",
+           width_mults=(0.25, 0.5, 0.75, 1.0),
+           arch_mode: str = "width", quiet: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core.server import (ClientSpec, FLConfig, fl_round,
+                                   make_client_specs, select_clients)
+    from repro.data import partition as part_mod
+    from repro.data import pipeline, synthetic
+    from repro.models import model as model_mod
+    from repro.models.masks import ClientArch, max_section_depths
+
+    cfg = get_arch(arch).reduced().replace(n_layers=4, n_sections=2)
+    # 4 layers / 2 sections so DEPTH flexibility is real (reduced() alone
+    # gives 2 layers -> both sections have max depth 1 and the depth pool
+    # degenerates to homogeneous clients).
+    if task == "cls":
+        cfg = cfg.replace(vocab_size=max(64, n_classes), tie_embeddings=False)
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    params = model_mod.init_params(cfg, key)
+
+    archs = client_arch_pool(cfg, arch_mode, width_mults)
+    parts = (part_mod.noniid_partition(n_clients, n_classes, seed=seed)
+             if noniid else part_mod.iid_partition(n_clients, n_classes, seed=seed))
+    class_masks = [part_mod.client_class_mask(p, cfg.padded_vocab) for p in parts] \
+        if noniid else None
+    specs = make_client_specs(cfg, n_clients, archs=archs,
+                              malicious_frac=malicious_frac,
+                              class_masks=class_masks, seed=seed)
+    profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size, seed=seed)
+    fl = FLConfig(participation=participation, local_steps=local_steps,
+                  lr=lr, attack_lambda=attack_lambda, strategy=strategy,
+                  task=task, seed=seed)
+
+    hist = {"round": [], "loss": [], "global_acc": [], "local_acc": []}
+    test = pipeline.eval_batch_cls(n_classes, cfg.vocab_size, 256, seq_len,
+                                   profiles, seed=seed + 99)
+    test_j = {k: jnp.asarray(v) for k, v in test.items()}
+
+    @jax.jit
+    def global_acc(p):
+        logits, _ = model_mod.forward(p, cfg, {"tokens": test_j["tokens"]},
+                                      remat=False)
+        pred = jnp.argmax(jnp.mean(logits[..., :n_classes], axis=1), -1)
+        return jnp.mean((pred == test_j["labels"]).astype(jnp.float32))
+
+    # local personalization metric (non-IID): extracted client models on
+    # class-restricted local test sets (paper's "average local accuracy")
+    from repro.core.masking import apply_mask_tree, axis_mask_tree
+    local_eval = []
+    for ci in range(min(4, n_clients)):
+        d = pipeline.eval_batch_cls(n_classes, cfg.vocab_size, 64, seq_len,
+                                    profiles, classes=parts[ci]["classes"],
+                                    seed=seed + 300 + ci)
+        local_eval.append((ci, {k: jnp.asarray(v) for k, v in d.items()}))
+
+    def local_acc(p):
+        accs = []
+        for ci, d in local_eval:
+            s = specs[ci]
+            masks = s.arch.masks(cfg)
+            gates = s.arch.gates(cfg)
+            pm = apply_mask_tree(p, axis_mask_tree(cfg, masks))
+            logits, _ = model_mod.forward(pm, cfg, {"tokens": d["tokens"]},
+                                          masks=masks, gates=gates, remat=False)
+            lg = jnp.mean(logits[..., :n_classes], axis=1)
+            if s.class_mask is not None:
+                cm = jnp.asarray(s.class_mask[:n_classes])
+                lg = jnp.where(cm[None] > 0, lg, -1e30)
+            accs.append(float(jnp.mean(
+                (jnp.argmax(lg, -1) == d["labels"]).astype(jnp.float32))))
+        return float(np.mean(accs))
+
+    hist["local_acc"] = []
+    for r in range(rounds):
+        sel = select_clients(n_clients, participation, rng)
+        sel_specs = [specs[i] for i in sel]
+        batches_np = pipeline.round_batches_cls(
+            parts, sel, n_classes, cfg.vocab_size, local_steps=local_steps,
+            batch=batch, seq_len=seq_len, profiles=profiles,
+            seed=seed * 1000 + r)
+        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
+        params, loss = fl_round(params, cfg, fl, sel_specs, batches,
+                                jax.random.fold_in(key, r))
+        if r % eval_every == 0 or r == rounds - 1:
+            acc = float(global_acc(params))
+            lacc = local_acc(params)
+            hist["round"].append(r)
+            hist["loss"].append(float(loss))
+            hist["global_acc"].append(acc)
+            hist["local_acc"].append(lacc)
+            if not quiet:
+                print(f"[{strategy}/{arch_mode}] round {r:3d} "
+                      f"loss {float(loss):.4f} global_acc {acc:.3f} "
+                      f"local_acc {lacc:.3f}", flush=True)
+    hist["final_acc"] = hist["global_acc"][-1]
+    hist["final_local_acc"] = hist["local_acc"][-1]
+    return hist
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["fl", "dense"], default="fl")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--strategy", default="fedfa")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--malicious-frac", type=float, default=0.0)
+    ap.add_argument("--attack-lambda", type=float, default=1.0)
+    ap.add_argument("--noniid", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.mode == "dense":
+        res = run_dense(args.arch, args.steps, args.batch, args.seq_len)
+    else:
+        res = run_fl(args.arch, args.rounds, args.clients,
+                     strategy=args.strategy,
+                     malicious_frac=args.malicious_frac,
+                     attack_lambda=args.attack_lambda, noniid=args.noniid,
+                     batch=args.batch, seq_len=args.seq_len)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

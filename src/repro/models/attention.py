@@ -1,0 +1,262 @@
+"""Grouped-query attention with KV caches, sliding windows, and head masks.
+
+Three entry points used by the transformer stack:
+  * ``attend``            — full-sequence attention (train / prefill)
+  * ``attend_decode``     — one-token step against a (possibly ring) KV cache
+  * ``init_kv_cache``     — allocate the cache for serving
+
+Ring-ness of a cache is a *static* property derived from shapes
+(capacity <= window), so the cache pytree carries only arrays.
+
+The dense math path is XLA (this is what multi-pod dry-runs lower); the
+Pallas flash-attention kernel in ``repro.kernels.flash_attention`` is the
+TPU hot path and is validated against :func:`attend` in tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope  # re-export for transformer.py
+
+NEG_INF = -2.0 ** 30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, K, hd) — C = seq capacity or ring window
+    v: jax.Array
+    pos: jax.Array        # () int32: number of tokens already written
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+                  dtype) -> KVCache:
+    z = jnp.zeros((batch, capacity, n_kv, head_dim), dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head H/K times."""
+    n_kv = k.shape[2]
+    rep = n_heads // n_kv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+# blocked path kicks in above this q*k footprint (elements per head-batch)
+_BLOCKED_THRESHOLD = 2048 * 2048
+# roofline probes set this: python-unrolled block loops so XLA's cost
+# analysis (which counts while bodies once) sees every block.
+_FORCE_UNROLL = False
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool = True,
+           window: Optional[int] = None,
+           head_mask: Optional[jax.Array] = None,
+           q_offset: int = 0) -> jax.Array:
+    """Attention entry point.  q: (B, Sq, H, hd); k,v: (B, Sk, K, hd).
+
+    ``head_mask``: (H,) float — FedFA width mask; masked heads output zeros.
+    ``window``: sliding-window causal attention (attend to <= window-1 back).
+
+    Long sequences route to :func:`attend_blocked` (online-softmax over kv
+    chunks, flash-attention memory behaviour in pure XLA) so prefill_32k /
+    train_4k never materialize S² logits; the Pallas kernel replaces this
+    on real TPUs.
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq * Sk > _BLOCKED_THRESHOLD and Sq > 1:
+        if _FORCE_UNROLL:
+            return attend_blocked(q, k, v, causal=causal, window=window,
+                                  head_mask=head_mask, q_offset=q_offset,
+                                  bq=2048, bk=2048, unroll=True)
+        return attend_blocked(q, k, v, causal=causal, window=window,
+                              head_mask=head_mask, q_offset=q_offset)
+    return _attend_dense(q, k, v, causal=causal, window=window,
+                         head_mask=head_mask, q_offset=q_offset)
+
+
+def _attend_dense(q, k, v, *, causal=True, window=None, head_mask=None,
+                  q_offset=0) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if head_mask is not None:
+        out = out * head_mask[None, None, :, None].astype(out.dtype)
+    return out
+
+
+def attend_blocked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   head_mask: Optional[jax.Array] = None, q_offset: int = 0,
+                   bq: int = 512, bk: int = 1024,
+                   unroll: bool = False) -> jax.Array:
+    """Online-softmax blocked attention (flash semantics in pure XLA).
+
+    Peak live memory per device is O(bq·bk) logits instead of O(Sq·Sk).
+    Exact (not approximate); validated against `_attend_dense` in tests.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = (Sq + pad_q) // bq, (Sk + pad_k) // bk
+    scale = hd ** -0.5
+    Kh = kf.shape[2]
+    qb = qf.reshape(B, nq, bq, H, hd)
+    kb = kf.reshape(B, nk, bk, Kh, hd)
+    vb = vf.reshape(B, nk, bk, Kh, hd)
+
+    def q_block(i, qi):
+        # qi: (B, bq, H, hd)
+        @jax.checkpoint
+        def kv_step(carry, j):
+            m_run, l_run, acc = carry
+            kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+            kj = _expand_kv(kj, H)
+            vj = _expand_kv(vj, H)
+            # bf16 inputs: keep operands bf16, accumulate f32 on the MXU —
+            # halves the dominant HBM traffic of the blocked attention
+            # (§Perf iter 3); f32 inputs keep the exact path for tests.
+            fast = qi.dtype == jnp.bfloat16
+            if fast:
+                s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                               preferred_element_type=jnp.float32) * scale
+            else:
+                s = jnp.einsum("bqhd,bkhd->bhqk",
+                               qi.astype(jnp.float32) * scale,
+                               kj.astype(jnp.float32))
+            qpos = i * bq + jnp.arange(bq)[:, None] + q_offset
+            kpos = j * bk + jnp.arange(bk)[None, :]
+            mask = kpos < Sk
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_run, m_cur)
+            p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bhqk,bkhd->bqhd",
+                            p.astype(vj.dtype) if fast else p,
+                            vj if fast else vj.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * jnp.moveaxis(corr, 1, 2) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, bq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq, 1), jnp.float32)
+        a0 = jnp.zeros((B, bq, H, hd), jnp.float32)
+        # Sliding-window skip (§Perf iter 3b): a q block only overlaps
+        # ceil((bq+window)/bk)+1 kv blocks, so iterate that static count
+        # from a dynamic start instead of all nk blocks — cuts windowed
+        # prefill attention compute/traffic by ~Sk/(bq+window).
+        if window is not None and causal:
+            nke = min(nk, (bq + window) // bk + 2)
+            start = jnp.clip((i * bq + q_offset - window) // bk, 0, nk - nke)
+            steps = start + jnp.arange(nke)
+        else:
+            steps = jnp.arange(nk)
+        if unroll:
+            carry = (m0, l0, a0)
+            for j in range(steps.shape[0]):
+                carry, _ = kv_step(carry, steps[j])
+            m_f, l_f, acc = carry
+        else:
+            (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), steps)
+        l_f = jnp.maximum(l_f, 1e-30)
+        return acc / jnp.moveaxis(l_f, 1, 2)
+
+    if unroll:
+        out = jnp.stack([q_block(jnp.asarray(i), qb[:, i])
+                         for i in range(nq)], axis=0)
+    else:
+        out = jax.lax.map(lambda args: q_block(*args),
+                          (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * bq, H, hd)[:, :Sq]
+    out = out.astype(q.dtype)
+    if head_mask is not None:
+        out = out * head_mask[None, None, :, None].astype(out.dtype)
+    return out
+
+
+def cache_extend(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 ring: bool = False) -> KVCache:
+    """Write S new kv entries (prefill S tokens or decode S=1)."""
+    B, S = k_new.shape[:2]
+    cap = cache.capacity
+    if ring:
+        if S >= cap:                   # prefill longer than the window: keep tail
+            k_new, v_new = k_new[:, -cap:], v_new[:, -cap:]
+            idx = (cache.pos + S - cap + jnp.arange(cap)) % cap
+        else:
+            idx = (cache.pos + jnp.arange(S)) % cap
+    else:
+        idx = cache.pos + jnp.arange(S)
+    k = cache.k.at[:, idx].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[:, idx].set(v_new.astype(cache.v.dtype))
+    return KVCache(k, v, cache.pos + S)
+
+
+def attend_decode(q: jax.Array, cache: KVCache, *,
+                  ring: bool = False,
+                  window: Optional[int] = None,
+                  head_mask: Optional[jax.Array] = None) -> jax.Array:
+    """One-token decode: q (B, 1, H, hd) against the cache (already extended).
+
+    For ring caches the stored order is rotated; attention is permutation-
+    invariant given the right validity mask, so we only mask, never unrotate.
+    """
+    B, _, H, hd = q.shape
+    cap = cache.capacity
+    k = _expand_kv(cache.k, H)
+    v = _expand_kv(cache.v, H)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = cache.pos                     # tokens written, incl. current
+    slot = jnp.arange(cap)
+    if ring:
+        written = slot < jnp.minimum(pos, cap)
+        if window is not None and window < cap:
+            # absolute position of the latest write to slot s
+            last_abs = ((pos - 1 - slot) // cap) * cap + slot
+            written &= last_abs > pos - 1 - window
+        valid = written
+    else:
+        valid = slot < pos
+        if window is not None:
+            valid &= slot > pos - 1 - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if head_mask is not None:
+        out = out * head_mask[None, None, :, None].astype(out.dtype)
+    return out

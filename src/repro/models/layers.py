@@ -1,0 +1,111 @@
+"""Primitive layers: width-aware norms, rotary embeddings, inits.
+
+Width-awareness is the FedFA-critical property: a client whose width mask
+zeroes a suffix of channels must compute *exactly* what the corresponding
+small dense model computes.  Norms therefore divide by the number of
+*active* channels, not the padded dimension.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, mask: Optional[jax.Array],
+             eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last dim, counting only active channels."""
+    if mask is not None:
+        x = x * mask
+        n = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        n = x.shape[-1]
+    var = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True) / n
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = y * (1.0 + scale.astype(x.dtype))
+    return y * mask if mask is not None else y
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               mask: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last dim, counting only active channels."""
+    xf = x.astype(jnp.float32)
+    if mask is not None:
+        xf = xf * mask
+        n = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        n = x.shape[-1]
+    mean = jnp.sum(xf, axis=-1, keepdims=True) / n
+    if mask is not None:
+        cent = (xf - mean) * mask
+    else:
+        cent = xf - mean
+    var = jnp.sum(cent ** 2, axis=-1, keepdims=True) / n
+    y = (cent * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    y = y * scale.astype(x.dtype) + bias.astype(x.dtype)
+    return y * mask if mask is not None else y
+
+
+def apply_norm(kind: str, x, p, mask, eps):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"], mask, eps)
+    return layer_norm(x, p["scale"], p["bias"], mask, eps)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                              # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0) -> jax.Array:
+    """Variance-scaling (fan-in) initializer."""
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

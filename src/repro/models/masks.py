@@ -1,0 +1,154 @@
+"""FedFA client-architecture runtime: width masks + depth gates + graft maps.
+
+A *client architecture* is (width multiplier, per-section depth).  In the
+padded-dense SPMD representation every client shares the global parameter
+shapes; this module builds
+  * contiguous prefix width masks per flexible dimension (HeteroFL-style
+    structured contiguous pruning, paper Alg. 1 line 19),
+  * per-repeat depth gates (Alg. 3: clients keep the *first* d_s blocks of
+    each section),
+  * graft index maps (Alg. 2: missing depth positions are filled with the
+    section's last active block).
+Everything is a plain jax array so client runtimes can be stacked and
+vmapped over the mesh's `data` axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class WidthSpec:
+    """Integer active sizes per flexible dimension (host-side)."""
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    n_experts: int = 0
+    ssm_heads: int = 0
+    d_rnn: int = 0
+
+
+def width_spec(cfg: ArchConfig, w: float) -> WidthSpec:
+    """Contiguous-prefix active sizes for width multiplier w in (0, 1]."""
+    assert 0.0 < w <= 1.0
+    if cfg.n_kv_heads > 0:
+        kv = max(1, int(round(w * cfg.n_kv_heads)))
+        group = cfg.n_heads // cfg.n_kv_heads
+        heads = kv * group
+    else:
+        kv = heads = 0
+    d_model = max(16, int(w * cfg.d_model) // 8 * 8) if w < 1.0 else cfg.d_model
+    d_ff = max(8, int(w * cfg.d_ff) // 8 * 8) if (cfg.d_ff and w < 1.0) else cfg.d_ff
+    n_exp = 0
+    if cfg.moe:
+        n_exp = max(cfg.moe.top_k, int(round(w * cfg.moe.n_experts)))
+    sh = dr = 0
+    if cfg.ssm:
+        sh = max(1, int(round(w * cfg.ssm.n_heads(cfg.d_model))))
+    if cfg.rglru:
+        dr = max(8, int(w * cfg.rglru.d_rnn(cfg.d_model)) // 8 * 8) if w < 1.0 \
+            else cfg.rglru.d_rnn(cfg.d_model)
+    return WidthSpec(d_model, heads, kv, d_ff, n_exp, sh, dr)
+
+
+def _prefix(n_total: int, n_active: int) -> jnp.ndarray:
+    return (jnp.arange(n_total) < n_active).astype(jnp.float32)
+
+
+@dataclass(frozen=True)
+class WidthMasks:
+    d_model: jnp.ndarray                      # (D,)
+    heads: Optional[jnp.ndarray]              # (H,)
+    kv_heads: Optional[jnp.ndarray]           # (K,)
+    d_ff: Optional[jnp.ndarray]               # (F,)
+    experts: Optional[jnp.ndarray] = None     # (E,)
+    ssm_heads: Optional[jnp.ndarray] = None   # (nh,)
+    d_rnn: Optional[jnp.ndarray] = None       # (dr,)
+
+
+# Registered as a pytree so stacked per-client masks can flow through
+# vmap / lax.scan in the aggregation and the federated round step.
+jax.tree_util.register_dataclass(
+    WidthMasks,
+    data_fields=["d_model", "heads", "kv_heads", "d_ff", "experts",
+                 "ssm_heads", "d_rnn"],
+    meta_fields=[])
+
+
+def stack_masks(ms: "list[WidthMasks]") -> WidthMasks:
+    """Stack per-client masks along a leading client axis."""
+    import jax as _jax
+    return _jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+
+
+def width_masks(cfg: ArchConfig, w: float) -> WidthMasks:
+    s = width_spec(cfg, w)
+    return WidthMasks(
+        d_model=_prefix(cfg.d_model, s.d_model),
+        heads=_prefix(cfg.n_heads, s.n_heads) if cfg.n_heads else None,
+        kv_heads=_prefix(cfg.n_kv_heads, s.n_kv_heads) if cfg.n_kv_heads else None,
+        d_ff=_prefix(cfg.d_ff, s.d_ff) if cfg.d_ff else None,
+        experts=_prefix(cfg.moe.n_experts, s.n_experts) if cfg.moe else None,
+        ssm_heads=_prefix(cfg.ssm.n_heads(cfg.d_model), s.ssm_heads) if cfg.ssm else None,
+        d_rnn=_prefix(cfg.rglru.d_rnn(cfg.d_model), s.d_rnn) if cfg.rglru else None,
+    )
+
+
+def full_masks(cfg: ArchConfig) -> WidthMasks:
+    return width_masks(cfg, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Depth: gates + graft maps over the repeat axis of stage 0
+# ---------------------------------------------------------------------------
+
+def max_section_depths(cfg: ArchConfig) -> Tuple[int, ...]:
+    return tuple(hi - lo for lo, hi in cfg.section_bounds())
+
+
+def depth_gates(cfg: ArchConfig, section_depths: Tuple[int, ...]) -> jnp.ndarray:
+    """(R,) float gate over stage-0 repeats: first d_s repeats of section s."""
+    bounds = cfg.section_bounds()
+    assert len(section_depths) == len(bounds)
+    g = np.zeros(cfg.stages()[0][1], np.float32)
+    for (lo, hi), d in zip(bounds, section_depths):
+        assert 1 <= d <= hi - lo, f"depth {d} invalid for section {(lo, hi)}"
+        g[lo:lo + d] = 1.0
+    return jnp.asarray(g)
+
+
+def graft_map(cfg: ArchConfig, section_depths: Tuple[int, ...]) -> jnp.ndarray:
+    """(R,) int32: Alg. 2 — missing repeats replicate the last active block."""
+    bounds = cfg.section_bounds()
+    m = np.arange(cfg.stages()[0][1], dtype=np.int32)
+    for (lo, hi), d in zip(bounds, section_depths):
+        m[lo + d:hi] = lo + d - 1
+    return jnp.asarray(m)
+
+
+@dataclass(frozen=True)
+class ClientArch:
+    """A client's selected architecture (paper Alg. 1 line 2)."""
+    width_mult: float
+    section_depths: Tuple[int, ...]
+
+    def masks(self, cfg: ArchConfig) -> WidthMasks:
+        return width_masks(cfg, self.width_mult)
+
+    def gates(self, cfg: ArchConfig) -> jnp.ndarray:
+        return depth_gates(cfg, self.section_depths)
+
+    def graft(self, cfg: ArchConfig) -> jnp.ndarray:
+        return graft_map(cfg, self.section_depths)
+
+
+def full_client(cfg: ArchConfig) -> ClientArch:
+    return ClientArch(1.0, max_section_depths(cfg))

@@ -1,0 +1,285 @@
+"""Top-level model API: init / train forward / loss / prefill / decode.
+
+All entry points take a ``ClientArch``-derived runtime (width masks + depth
+gates); the full/global model is just the runtime with all-ones masks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, softcap
+from repro.models.masks import WidthMasks, full_masks, max_section_depths
+from repro.models.transformer import (_stage_apply, init_params)
+
+Params = Dict[str, Any]
+
+
+def _full_gates(cfg: ArchConfig):
+    return [jnp.ones((reps,), jnp.float32) for _, reps in cfg.stages()]
+
+
+def _stage_gates(cfg: ArchConfig, gates0: Optional[jax.Array]):
+    """Depth gates per stage: FedFA flexes stage 0; later stages stay full."""
+    gs = _full_gates(cfg)
+    if gates0 is not None:
+        gs[0] = gates0
+    return gs
+
+
+def _embed(params: Params, cfg: ArchConfig, tokens: jax.Array,
+           m: WidthMasks, offset=0) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.family == "dense" or True:
+        pass
+    if cfg.rope_theta <= 0.0 and "pos_embed" in params:
+        S = tokens.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(params["pos_embed"], offset, S, 0)
+        x = x + pos[None]
+    if m.d_model is not None:
+        x = x * m.d_model.astype(x.dtype)
+    return x
+
+
+def _head(params: Params, cfg: ArchConfig, x: jax.Array, m: WidthMasks):
+    x = apply_norm(cfg.norm, x, params["final_norm"], m.d_model, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w.astype(x.dtype)
+    logits = softcap(logits, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask vocab-padding logits (sharding-only rows)
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def _encoder_apply(params: Params, cfg: ArchConfig, frames: jax.Array,
+                   m: WidthMasks):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    enc = params["encoder"]
+    x = frames
+    if "pos_embed" in params:
+        S = frames.shape[1]
+        x = x + params["pos_embed"][None, :S]
+    if m.d_model is not None:
+        x = x * m.d_model.astype(x.dtype)
+    positions = jnp.arange(frames.shape[1])[None]
+    x, _, _ = _stage_apply((enc["blocks"],), ("attn",), x, cfg, m,
+                           gates=jnp.ones((cfg.encoder.n_layers,), jnp.float32),
+                           positions=positions, window=None,
+                           causal=False, remat=cfg.remat)
+    return apply_norm(cfg.norm, x, enc["final_norm"], m.d_model, cfg.norm_eps)
+
+
+def _project_patches(params: Params, patches: jax.Array, m: WidthMasks):
+    pr = params["projector"]
+    h = jax.nn.gelu(patches @ pr["w1"])
+    h = h @ pr["w2"]
+    if m.d_model is not None:
+        h = h * m.d_model.astype(h.dtype)
+    return h
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            masks: Optional[WidthMasks] = None,
+            gates: Optional[jax.Array] = None,
+            window: Optional[int] = None,
+            remat: Optional[bool] = None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training / evaluation forward pass.
+
+    batch: {'tokens': (B, S) [, 'patches': (B, P, vit_dim)]
+            [, 'frames': (B, T, D)]}.
+    Returns (logits (B, S*, V), aux losses).
+    """
+    m = masks or full_masks(cfg)
+    remat = cfg.remat if remat is None else remat
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens, m)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encoder_apply(params, cfg, batch["frames"], m)
+    if cfg.vision is not None:
+        pe = _project_patches(params, batch["patches"], m)
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None]
+    win = window if window is not None else cfg.attn_window
+    aux_tot = {"lb_loss": jnp.zeros((), jnp.float32),
+               "z_loss": jnp.zeros((), jnp.float32)}
+    sg = _stage_gates(cfg, gates)
+    for i, (unit, reps) in enumerate(cfg.stages()):
+        x, _, aux = _stage_apply(params["stages"][i], unit, x, cfg, m,
+                                 gates=sg[i], positions=positions,
+                                 window=win, enc_out=enc_out, remat=remat)
+        for k in aux_tot:
+            aux_tot[k] = aux_tot[k] + aux[k]
+    logits = _head(params, cfg, x, m)
+    if cfg.vision is not None:
+        logits = logits[:, batch["patches"].shape[1]:]   # text positions only
+    return logits, aux_tot
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array,
+            class_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross entropy. class_mask: (V,) float — non-IID clients
+    zero-out logits of absent classes (paper §5.1)."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    if class_mask is not None:
+        lg = jnp.where(class_mask[None, None] > 0, lg, -1e30)
+    lp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def cls_loss(logits: jax.Array, labels: jax.Array,
+             class_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Sequence classification: mean-pool positions -> class logits live in
+    the first n_classes vocab slots (paper's image-classification analog)."""
+    lg = jnp.mean(logits.astype(jnp.float32), axis=1)
+    if class_mask is not None:
+        lg = jnp.where(class_mask[None] > 0, lg, -1e30)
+    lp = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], axis=-1))
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            masks=None, gates=None, task: str = "lm",
+            class_mask=None) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch, masks=masks, gates=gates)
+    if task == "lm":
+        base = lm_loss(logits, batch["tokens"], class_mask)
+    else:
+        base = cls_loss(logits, batch["labels"], class_mask)
+    total = base + aux["lb_loss"] + aux["z_loss"]
+    return total, {"loss": base, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_caches(params: Params, cfg: ArchConfig, batch: int, capacity: int, *,
+                window: Optional[int] = None, dtype=jnp.bfloat16):
+    """Allocate per-stage stacked caches mirroring params['stages']."""
+    win = window if window is not None else cfg.attn_window
+    kv_cap = min(capacity, win) if win else capacity
+    ring = bool(win) and kv_cap < capacity
+    out = []
+    for unit, reps in cfg.stages():
+        stage = []
+        for kind in unit:
+            if kind == "attn":
+                c = {"self": attn_mod.init_kv_cache(
+                    batch, kv_cap, cfg.n_kv_heads, cfg.head_dim, dtype)}
+            elif kind == "ssd":
+                c = {"ssm": ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype)}
+            elif kind == "rglru":
+                c = {"rg": rglru_mod.init_rglru_cache(batch, cfg.d_model, cfg.rglru, dtype)}
+            else:
+                raise ValueError(kind)
+            stage.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), c))
+        out.append(tuple(stage))
+    return tuple(out)
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            masks=None, gates=None, capacity: Optional[int] = None,
+            window: Optional[int] = None, cache_dtype=jnp.bfloat16,
+            chunk_size: Optional[int] = None):
+    """Process the prompt; returns (last-position logits, caches, enc_out).
+
+    ``chunk_size``: chunked prefill — run the prompt in chunks against the
+    growing KV cache.  Bounds token-count-proportional buffers (MoE
+    dispatch: 75 GB/dev -> a few GB for arctic prefill_32k).  Full-cache
+    attention archs only (no ring caches / enc-dec).
+    """
+    m = masks or full_masks(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens, m)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encoder_apply(params, cfg, batch["frames"], m)
+    if cfg.vision is not None:
+        pe = _project_patches(params, batch["patches"], m)
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    Sx = x.shape[1]
+    caches = init_caches(params, cfg, B, capacity or Sx, window=window,
+                         dtype=cache_dtype)
+    win = window if window is not None else cfg.attn_window
+    sg = _stage_gates(cfg, gates)
+
+    chunk = chunk_size if chunk_size is None else (
+        None if (win is not None or cfg.encoder is not None
+                 or Sx % chunk_size or Sx <= chunk_size) else chunk_size)
+    if chunk is None:
+        positions = jnp.arange(Sx)[None]
+        new_caches = []
+        for i, (unit, reps) in enumerate(cfg.stages()):
+            x, nc, _ = _stage_apply(params["stages"][i], unit, x, cfg, m,
+                                    gates=sg[i], positions=positions,
+                                    window=win, enc_out=enc_out,
+                                    caches=caches[i], remat=False)
+            new_caches.append(nc)
+        logits = _head(params, cfg, x[:, -1:], m)
+        return logits, tuple(new_caches), enc_out
+
+    nc_chunks = Sx // chunk
+    xc = jnp.moveaxis(x.reshape(B, nc_chunks, chunk, x.shape[-1]), 1, 0)
+
+    def body(caches, inp):
+        xch, off = inp
+        positions = (off + jnp.arange(chunk))[None]
+        new_caches = []
+        for i, (unit, reps) in enumerate(cfg.stages()):
+            xch, ncs, _ = _stage_apply(params["stages"][i], unit, xch, cfg, m,
+                                       gates=sg[i], positions=positions,
+                                       window=win, caches=caches[i],
+                                       remat=False, chunk_offset=off)
+            new_caches.append(ncs)
+        return tuple(new_caches), xch[:, -1:]
+
+    offsets = jnp.arange(nc_chunks) * chunk
+    caches, lasts = jax.lax.scan(body, caches, (xc, offsets))
+    logits = _head(params, cfg, lasts[-1], m)
+    return logits, caches, enc_out
+
+
+def decode_step(params: Params, cfg: ArchConfig, token: jax.Array,
+                caches, *, masks=None, gates=None, pos: Optional[jax.Array] = None,
+                window: Optional[int] = None, enc_out=None):
+    """One autoregressive step. token: (B, 1). Returns (logits, caches)."""
+    m = masks or full_masks(cfg)
+    if pos is None:
+        pos = _cache_pos(caches)
+    x = _embed(params, cfg, token, m, offset=0)
+    if cfg.rope_theta <= 0.0 and "pos_embed" in params:
+        # re-add position at the true offset (embed used offset 0)
+        x = x - params["pos_embed"][None, 0:1] + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, 0)[None]
+    positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+    win = window if window is not None else cfg.attn_window
+    new_caches = []
+    sg = _stage_gates(cfg, gates)
+    for i, (unit, reps) in enumerate(cfg.stages()):
+        x, nc, _ = _stage_apply(params["stages"][i], unit, x, cfg, m,
+                                gates=sg[i], positions=positions,
+                                window=win, enc_out=enc_out,
+                                caches=caches[i], decode=True, remat=False)
+        new_caches.append(nc)
+    logits = _head(params, cfg, x, m)
+    return logits, tuple(new_caches)
+
+
+def _cache_pos(caches) -> jax.Array:
+    """Current length from the first cache leaf named 'pos'."""
+    first_stage = caches[0][0]
+    c = next(iter(first_stage.values()))
+    return jnp.max(c.pos) if hasattr(c, "pos") else jnp.zeros((), jnp.int32)

@@ -1,0 +1,117 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+TPU-native design: instead of (tokens, experts, capacity) one-hot dispatch
+tensors (which are infeasible at 1M tokens x 128 experts), token->expert
+assignments are sorted by expert id and scattered into fixed (E, C, D)
+buffers.  Under pjit with experts sharded over the `model` mesh axis, the
+gather/scatter lowers to all-to-all style collectives — the expert-parallel
+pattern.
+
+FedFA width flexibility on MoE extends to the *expert axis*: weak clients
+hold a contiguous prefix of experts (`expert_mask`), and `d_ff_expert` can
+additionally be masked like a dense FFN.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import activation, dense_init
+from repro.sharding import hints
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, Fe = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d_model, Fe), dtype),
+        "w_up": dense_init(ks[2], (E, d_model, Fe), dtype),
+        "w_down": dense_init(ks[3], (E, Fe, d_model), dtype),
+    }
+    if cfg.dense_residual:
+        kd = jax.random.split(ks[4], 3)
+        p["dense"] = {
+            "w_gate": dense_init(kd[0], (d_model, Fe), dtype),
+            "w_up": dense_init(kd[1], (d_model, Fe), dtype),
+            "w_down": dense_init(kd[2], (Fe, d_model), dtype),
+        }
+    return p
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, act_name: str,
+            expert_mask: Optional[jax.Array] = None,
+            d_ff_mask: Optional[jax.Array] = None,
+            capacity: Optional[int] = None):
+    """x: (B, S, D) -> (out (B,S,D), aux_losses dict).
+
+    Sort-based dispatch with static capacity C per expert; overflowing
+    tokens are dropped (contribute their residual only), standard for
+    capacity-based MoE.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    act = activation(act_name)
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])            # (N, E)
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None, :] > 0, logits, -1e30)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, k)                          # (N, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux losses (Switch-style load balance + router z-loss) ---
+    me = jnp.mean(gates, axis=0)                                    # (N,E)->(E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E), axis=0)
+    n_active = E if expert_mask is None else jnp.maximum(expert_mask.sum(), 1.0)
+    lb_loss = n_active * jnp.sum(me * ce) * cfg.load_balance_loss
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_z_loss
+
+    # --- sort-based dispatch ---
+    C = capacity or max(1, int(cfg.capacity_factor * k * N / E))
+    flat_e = top_e.reshape(-1)                                      # (N*k,)
+    flat_g = top_g.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), k)
+    order = jnp.argsort(flat_e)                                     # stable
+    se, sg, stok = flat_e[order], flat_g[order], flat_tok[order]
+    # segment-relative rank: index within the sorted array minus the start
+    # index of this expert's segment.
+    seg_start = jnp.searchsorted(se, jnp.arange(E))                 # (E,)
+    pos_in_e = jnp.arange(N * k) - seg_start[se]
+    keep = pos_in_e < C
+    slot = se * C + jnp.where(keep, pos_in_e, 0)                    # (N*k,)
+
+    # gather tokens into (E*C, D)
+    # NOTE(§Perf iter 2, refuted hypothesis): forcing P('model',None,None)
+    # on the dispatch buffer here materializes replicated->sharded resharding
+    # and TRIPLED the measured collective bytes (7.3GB -> 26.3GB full-step);
+    # GSPMD's own propagation through the sort-dispatch is better. Left
+    # unconstrained deliberately.
+    buf = jnp.zeros((E * C, D), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xf[stok], 0))
+    buf = buf.reshape(E, C, D)
+
+    # expert computation (E, C, D) x (E, D, Fe)
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    if d_ff_mask is not None:
+        m = d_ff_mask.astype(wg.dtype)
+        wg = wg * m[None, None, :]
+        wu = wu * m[None, None, :]
+        wd = wd * m[None, :, None]
+    h = act(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd).reshape(E * C, D)
+
+    # combine back: weighted scatter-add to tokens
+    contrib = jnp.where(keep[:, None], y[slot] * sg[:, None].astype(y.dtype), 0)
+    out = jnp.zeros((N, D), x.dtype).at[stok].add(contrib)
+
+    if cfg.dense_residual and "dense" in params:
+        d = params["dense"]
+        out = out + (act(xf @ d["w_gate"]) * (xf @ d["w_up"])) @ d["w_down"]
+
+    return out.reshape(B, S, D), {"lb_loss": lb_loss, "z_loss": z_loss}

@@ -1,0 +1,146 @@
+"""RecurrentGemma RG-LRU recurrent block (Real-Gated Linear Recurrent Unit).
+
+Sequence mode uses an associative scan (log-depth, sub-quadratic); decode
+is the exact one-step recurrence on a (B, d_rnn) state, which is what makes
+``long_500k`` native for the hybrid architecture.
+
+Block layout (De et al., arXiv:2402.19427):
+  x -> [linear -> causal conv1d -> RG-LRU] * gelu(linear gate) -> linear out
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers import dense_init
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array       # (B, d_conv-1, dr)
+    h: jax.Array          # (B, dr) recurrent state
+    pos: jax.Array
+
+
+def init_rglru(key, d_model: int, cfg: RGLRUConfig, dtype) -> dict:
+    dr = cfg.d_rnn(d_model)
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(Lambda)^c is in (0.9, 0.999)
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / cfg.c)) / (1.0 - u ** (1.0 / cfg.c)))
+    return {
+        "in_x": dense_init(ks[0], (d_model, dr), dtype),
+        "in_gate": dense_init(ks[1], (d_model, dr), dtype),
+        "conv_w": dense_init(ks[2], (cfg.d_conv, dr), dtype, scale=3.0),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_r": dense_init(ks[3], (dr, dr), jnp.float32),
+        "b_r": jnp.zeros((dr,), jnp.float32),
+        "w_i": dense_init(ks[4], (dr, dr), jnp.float32),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "out": dense_init(ks[0], (dr, d_model), dtype),
+    }
+
+
+def _gates(params, x, mask, c):
+    """r,i gates and log-decay. x: (..., dr) float32."""
+    r = jax.nn.sigmoid(x @ params["w_r"] + params["b_r"])
+    i = jax.nn.sigmoid(x @ params["w_i"] + params["b_i"])
+    log_a_base = jax.nn.log_sigmoid(params["lam"])         # log sigmoid(Lam)
+    log_a = c * r * log_a_base[None]                       # broadcast (..., dr)
+    if mask is not None:
+        log_a = log_a * mask
+        i = i * mask
+    return log_a, i
+
+
+def rglru_scan(params: dict, xin: jax.Array, cfg: RGLRUConfig,
+               mask: Optional[jax.Array], h0: Optional[jax.Array] = None):
+    """RG-LRU over a sequence via associative scan. xin: (B, S, dr) conv out."""
+    xf = xin.astype(jnp.float32)
+    log_a, i = _gates(params, xf, mask, cfg.c)             # (B,S,dr)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    v = beta * (i * xf)                                    # input injection
+    if h0 is not None:
+        # fold initial state in as a virtual first step with a=carry
+        v = v.at[:, 0].add(a[:, 0] * h0)
+        # note: exact because h_1 = a_1 h_0 + v_1
+
+    def combine(c1, c2):
+        a1, v1 = c1
+        a2, v2 = c2
+        return a1 * a2, a2 * v1 + v2
+
+    A, H = jax.lax.associative_scan(combine, (a, v), axis=1)
+    if mask is not None:
+        H = H * mask
+    return H.astype(xin.dtype), H[:, -1]
+
+
+def rglru_block(params: dict, u: jax.Array, cfg: RGLRUConfig, d_model: int,
+                mask_dr: Optional[jax.Array] = None,
+                d_model_mask: Optional[jax.Array] = None,
+                cache: Optional[RGLRUCache] = None):
+    """Full RG block over (B, S, D)."""
+    x = u @ params["in_x"]
+    gate = jax.nn.gelu(u @ params["in_gate"])
+    if mask_dr is not None:
+        x = x * mask_dr.astype(x.dtype)
+        gate = gate * mask_dr.astype(gate.dtype)
+    # causal depthwise conv
+    K = params["conv_w"].shape[0]
+    if cache is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = cache.conv.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    xc = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i][None, None]
+             for i in range(K)) + params["conv_b"][None, None]
+    new_conv = xp[:, -(K - 1):]
+    h0 = None if cache is None else cache.h
+    y, hF = rglru_scan(params, xc, cfg, mask_dr, h0)
+    out = (y * gate) @ params["out"]
+    if d_model_mask is not None:
+        out = out * d_model_mask.astype(out.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = RGLRUCache(new_conv, hF, cache.pos + u.shape[1])
+    return out, new_cache
+
+
+def rglru_decode(params: dict, u: jax.Array, cfg: RGLRUConfig, d_model: int,
+                 cache: RGLRUCache,
+                 mask_dr: Optional[jax.Array] = None,
+                 d_model_mask: Optional[jax.Array] = None):
+    """One-token step. u: (B, 1, D)."""
+    x = (u @ params["in_x"])[:, 0]
+    gate = jax.nn.gelu(u @ params["in_gate"])[:, 0]
+    if mask_dr is not None:
+        x = x * mask_dr.astype(x.dtype)
+        gate = gate * mask_dr.astype(gate.dtype)
+    K = params["conv_w"].shape[0]
+    xp = jnp.concatenate([cache.conv.astype(x.dtype), x[:, None]], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", xp, params["conv_w"]) + params["conv_b"]
+    new_conv = xp[:, 1:]
+    xf = xc.astype(jnp.float32)
+    log_a, i = _gates(params, xf, mask_dr, cfg.c)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    h = a * cache.h + beta * (i * xf)
+    if mask_dr is not None:
+        h = h * mask_dr
+    out = ((h.astype(u.dtype) * gate) @ params["out"])[:, None]
+    if d_model_mask is not None:
+        out = out * d_model_mask.astype(out.dtype)
+    return out, RGLRUCache(new_conv, h, cache.pos + 1)
+
+
+def init_rglru_cache(batch: int, d_model: int, cfg: RGLRUConfig, dtype) -> RGLRUCache:
+    dr = cfg.d_rnn(d_model)
+    return RGLRUCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, dr), dtype),
+        h=jnp.zeros((batch, dr), jnp.float32),
+        pos=jnp.zeros((), jnp.int32))

@@ -1,0 +1,212 @@
+"""Mamba-2 SSD (state-space duality) block, chunked for TPUs.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic
+"attention-like" term + inter-chunk recurrent state carry via lax.scan);
+decode is the exact single-step recurrence on an (n_heads, head_dim,
+d_state) state — this is what makes ``long_500k`` native for mamba2.
+
+The intra-chunk term is the compute hot-spot and has a Pallas kernel in
+``repro.kernels.ssd`` validated against the jnp path here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array      # (B, d_conv-1, conv_dim) last inputs to the conv
+    h: jax.Array         # (B, nh, hp, N) recurrent state
+    pos: jax.Array       # () int32
+
+
+def init_ssd(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    N = cfg.d_state
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * di + 2 * N + nh), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, conv_dim), dtype, scale=3.0),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d_model), dtype),
+    }
+
+
+def _split_proj(proj: jax.Array, di: int, N: int, nh: int):
+    z, xBC, dt = jnp.split(proj, [di, di + di + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over (B, S, C). Returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)                 # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i][None, None] for i in range(K))
+    out = jax.nn.silu(out + b[None, None])
+    new_state = xp[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return out, new_state
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int):
+    """Pure-jnp chunked SSD.  Shapes:
+      x: (b, S, nh, hp); dt: (b, S, nh) post-softplus; A: (nh,) negative;
+      B, C: (b, S, N) (ngroups=1 shared over heads).
+    Returns y: (b, S, nh, hp) and final state (b, nh, hp, N).
+    """
+    b, S, nh, hp = x.shape
+    N = B.shape[-1]
+    Q = chunk
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xc = x.reshape(b, nc, Q, nh, hp)
+    dtc = dt.reshape(b, nc, Q, nh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, N).astype(jnp.float32)
+
+    la = dtc * A[None, None, None, :]                     # log a_t  (b,nc,Q,nh)
+    L = jnp.cumsum(la, axis=2)                            # cumulative within chunk
+
+    # intra-chunk: M[t,s] = (C_t . B_s) * exp(L_t - L_s) * dt_s  for s <= t
+    CB = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)            # (b,nc,Q,Q)
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]      # (b,nc,t,s,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    M = CB[..., None] * jnp.exp(jnp.where(causal[None, None, :, :, None], diff, -jnp.inf))
+    M = M * dtc[:, :, None, :, :]                         # weight by dt_s
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xc.astype(jnp.float32))
+
+    # inter-chunk state carry
+    # state contribution of chunk c: sum_s exp(L_Q - L_s) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(L[:, :, -1:, :] - L)           # (b,nc,Q,nh)
+    dB = Bc[:, :, :, None, :] * (dtc * decay_to_end)[..., None]   # (b,nc,Q,nh,N)
+    chunk_state = jnp.einsum("bcshn,bcshp->bchpn", dB[:, :, :, :, :], xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(L[:, :, -1, :])                 # (b,nc,nh)
+
+    def step(h, inp):
+        st, dec, Lc, Cck = inp
+        # y_inter[t] = exp(L_t) * C_t @ h
+        y_int = jnp.einsum("btn,bhpn,bth->bthp", Cck, h, jnp.exp(Lc))
+        h_next = dec[:, :, None, None] * h + st
+        return h_next, y_int
+
+    h0 = jnp.zeros((b, nh, hp, N), jnp.float32)
+    # scan over chunks
+    hF, y_inter = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+         jnp.moveaxis(L, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                 # (b,nc,Q,nh,hp)
+
+    y = (y_intra + y_inter).reshape(b, Sp, nh, hp)[:, :S]
+    return y.astype(x.dtype), hF
+
+
+def ssd_forward(params: dict, u: jax.Array, cfg: SSMConfig, d_model: int,
+                head_mask: Optional[jax.Array] = None,
+                d_model_mask: Optional[jax.Array] = None,
+                norm_eps: float = 1e-5,
+                cache: Optional[SSMCache] = None,
+                use_kernel: bool = False):
+    """Full-sequence SSD block. u: (B, S, D). Returns (out, new_cache|None)."""
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    hp, N = cfg.head_dim, cfg.d_state
+    proj = u @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, di, N, nh)
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                   None if cache is None else cache.conv)
+    x, B, C = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = x.reshape(*x.shape[:2], nh, hp)
+    if head_mask is not None:
+        xh = xh * head_mask[None, None, :, None].astype(xh.dtype)
+        dt = dt * head_mask[None, None, :]
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+        y, hF = ssd_ops.ssd(xh, dt, A, B, C, cfg.chunk)
+    else:
+        y, hF = ssd_chunked_ref(xh, dt, A, B, C, cfg.chunk)
+    y = y + (params["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*y.shape[:2], di)
+    inner_mask = None
+    if head_mask is not None:
+        inner_mask = jnp.repeat(head_mask, hp)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], inner_mask, norm_eps)
+    out = y @ params["out_proj"]
+    if d_model_mask is not None:
+        out = out * d_model_mask.astype(out.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(conv_state, hF, cache.pos + u.shape[1])
+    return out, new_cache
+
+
+def ssd_decode(params: dict, u: jax.Array, cfg: SSMConfig, d_model: int,
+               cache: SSMCache,
+               head_mask: Optional[jax.Array] = None,
+               d_model_mask: Optional[jax.Array] = None,
+               norm_eps: float = 1e-5):
+    """Single-token recurrence. u: (B, 1, D)."""
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    hp, N = cfg.head_dim, cfg.d_state
+    proj = u @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, di, N, nh)
+    # conv over the stored window + this input
+    K = params["conv_w"].shape[0]
+    xp = jnp.concatenate([cache.conv.astype(xBC.dtype), xBC], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", xp, params["conv_w"]) + params["conv_b"]
+    xBC1 = jax.nn.silu(out)[:, None]                      # (B,1,C)
+    new_conv = xp[:, 1:]
+    x, B, C = jnp.split(xBC1, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    xh = x.reshape(x.shape[0], nh, hp).astype(jnp.float32)
+    if head_mask is not None:
+        xh = xh * head_mask[None, :, None]
+        dt = dt * head_mask[None, :]
+    a = jnp.exp(dt * A[None, :])                          # (B,nh)
+    Bv = B[:, 0].astype(jnp.float32)                      # (B,N)
+    Cv = C[:, 0].astype(jnp.float32)
+    h = cache.h * a[:, :, None, None] + (
+        (dt[:, :, None] * xh)[..., None] * Bv[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(y.shape[0], 1, di).astype(u.dtype)
+    inner_mask = jnp.repeat(head_mask, hp) if head_mask is not None else None
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], inner_mask, norm_eps)
+    outp = y @ params["out_proj"]
+    if d_model_mask is not None:
+        outp = outp * d_model_mask.astype(outp.dtype)
+    return outp, SSMCache(new_conv, h, cache.pos + 1)
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype) -> SSMCache:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    conv_dim = di + 2 * cfg.d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+        pos=jnp.zeros((), jnp.int32))

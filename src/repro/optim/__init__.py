@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (OptState, init_opt, opt_update,
+                                    sgd_momentum, adamw)
+from repro.optim.schedules import make_schedule

@@ -1,0 +1,60 @@
+"""Optimizers: SGD+momentum (paper's choice, Table 6) and AdamW.
+
+Minimal optax-free implementations so the whole substrate is self-contained.
+State layout: {"step": (), "m": tree [, "v": tree]}.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Dict[str, Any]
+
+
+def init_opt(params, name: str, momentum_dtype=jnp.float32) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=momentum_dtype), params)
+    st: OptState = {"step": jnp.zeros((), jnp.int32), "m": z}
+    if name == "adamw":
+        st["v"] = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return st
+
+
+def sgd_momentum(params, grads, st: OptState, lr, *, momentum=0.9,
+                 weight_decay=1e-4) -> Tuple[Any, OptState]:
+    g_eff = jax.tree.map(
+        lambda p, g: g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32),
+        params, grads)
+    new_m = jax.tree.map(lambda m, g: momentum * m + g, st["m"], g_eff)
+    new_p = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_m)
+    return new_p, {"step": st["step"] + 1, "m": new_m}
+
+
+def adamw(params, grads, st: OptState, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1) -> Tuple[Any, OptState]:
+    step = st["step"] + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    new_m = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), st["m"], grads)
+    new_v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * g.astype(jnp.float32) ** 2, st["v"], grads)
+    new_p = jax.tree.map(
+        lambda p, m, v: (p.astype(jnp.float32) - lr * (
+            (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+        params, new_m, new_v)
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+def opt_update(name: str, params, grads, st: OptState, lr, **kw):
+    if name == "sgd":
+        kw.setdefault("momentum", 0.9)
+        kw.setdefault("weight_decay", 1e-4)
+        return sgd_momentum(params, grads, st, lr, **kw)
+    if name == "adamw":
+        return adamw(params, grads, st, lr, **kw)
+    raise ValueError(name)

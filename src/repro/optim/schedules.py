@@ -1,0 +1,35 @@
+"""LR schedules: constant, step decay (paper Table 6), cosine, and WSD
+(warmup-stable-decay; MiniCPM's schedule, cited for the minicpm-2b config)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(name: str, base_lr: float, total_steps: int, *,
+                  warmup: int = 0, decay_at=(0.5, 0.75), decay_factor=0.1,
+                  stable_frac: float = 0.8):
+    total = max(total_steps, 1)
+
+    def constant(step):
+        return jnp.full((), base_lr, jnp.float32)
+
+    def step_decay(step):
+        lr = jnp.full((), base_lr, jnp.float32)
+        for frac in decay_at:
+            lr = jnp.where(step >= frac * total, lr * decay_factor, lr)
+        return lr
+
+    def cosine(step):
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+    def wsd(step):
+        """Warmup -> stable plateau -> 1-sqrt decay tail (MiniCPM)."""
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        stable_end = stable_frac * total
+        tail = jnp.clip((step - stable_end) / jnp.maximum(total - stable_end, 1), 0, 1)
+        return base_lr * warm * (1.0 - (1.0 - 0.1) * jnp.sqrt(tail))
+
+    return {"constant": constant, "step": step_decay,
+            "cosine": cosine, "wsd": wsd}[name]

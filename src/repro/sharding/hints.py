@@ -1,0 +1,53 @@
+"""Activation-sharding hints.
+
+Model code calls ``constrain(x, kind)`` at layout-critical points; by
+default this is a no-op (CPU tests), and the launcher installs a policy
+mapping kinds -> PartitionSpecs before lowering for the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_policy() -> Optional[Dict[str, P]]:
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def policy(mapping: Dict[str, P]):
+    prev = current_policy()
+    _state.policy = mapping
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    pol = current_policy()
+    if pol is None or kind not in pol:
+        return x
+    spec = pol[kind]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def megatron_policy(batch_axes=("data",), model_axis="model") -> Dict[str, P]:
+    """Residual replicated over model; heads/ffn/experts sharded over model."""
+    b = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return {
+        "residual": P(b, None, None),
+        "heads": P(b, None, model_axis, None),
+        "ffn": P(b, None, model_axis),
+        "experts": P(model_axis, None, None),
+        "tokens": P(b, None),
+        "logits": P(b, None, model_axis),
+    }

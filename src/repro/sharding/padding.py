@@ -1,0 +1,41 @@
+"""Head padding for serving — FedFA's padded-dense machinery reused as the
+production sharding-padding mechanism.
+
+Architectures whose kv-head count doesn't divide the 16-way model axis
+(minicpm 36, smollm 3, tinyllama 4, recurrentgemma 1) otherwise REPLICATE
+their KV cache across the model axis: minicpm decode_32k costs 270 GB/device
+and a 180 GB all-gather (EXPERIMENTS.md §Perf iteration 1).  Padding kv
+heads to a multiple of 16 and masking the extras with a FedFA width mask is
+*exactly* a width-masked client model, so correctness is already proven by
+the width-equivalence tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.masks import WidthMasks, full_masks
+
+
+def pad_heads_for_serving(cfg: ArchConfig, axis: int = 16
+                          ) -> Tuple[ArchConfig, Optional[WidthMasks]]:
+    """Returns (padded config, width masks activating only the real heads).
+
+    No-op (masks=None) when kv heads already divide the model axis or the
+    architecture is attention-free.
+    """
+    K = cfg.n_kv_heads
+    if K == 0 or K % axis == 0:
+        return cfg, None
+    group = cfg.n_heads // K
+    Kp = (K + axis - 1) // axis * axis
+    cfg2 = cfg.replace(n_kv_heads=Kp, n_heads=Kp * group)
+    m = full_masks(cfg2)
+    masks = dataclasses.replace(
+        m,
+        heads=(jnp.arange(cfg2.n_heads) < cfg.n_heads).astype(jnp.float32),
+        kv_heads=(jnp.arange(Kp) < K).astype(jnp.float32))
+    return cfg2, masks

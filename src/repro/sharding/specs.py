@@ -1,0 +1,206 @@
+"""Parameter / input PartitionSpec policy for the production mesh.
+
+Megatron-style tensor parallel over ``model`` (flattened head dims, d_ff,
+vocab, experts, d_rnn/d_inner) plus FSDP over ``data`` for archs flagged
+``fsdp=True``.  GSPMD handles non-divisible dims (e.g. vocab=122753 on 16
+shards) by internal padding; the honest FLOP cost of that padding shows up
+in the roofline's useful-FLOPs ratio.
+
+Specs are built as a tree parallel to ``init_params`` (same technique as
+``repro.core.masking.axis_mask_tree``); depth-stacked stage leaves get a
+leading ``None`` for the repeat axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _pre(spec: P, lead: int = 1) -> P:
+    return P(*([None] * lead + list(spec)))
+
+
+def _norm_spec(cfg, lead=0) -> Dict[str, P]:
+    s = {"scale": _pre(P(None), lead)}
+    if cfg.norm == "layernorm":
+        s["bias"] = _pre(P(None), lead)
+    return s
+
+
+def _attn_spec(cfg, f, lead=1) -> Dict[str, P]:
+    return {"wq": _pre(P(f, "model"), lead), "wk": _pre(P(f, "model"), lead),
+            "wv": _pre(P(f, "model"), lead), "wo": _pre(P("model", f), lead)}
+
+
+def _ffn_spec(cfg, f, lead=1) -> Dict[str, P]:
+    if cfg.norm == "layernorm":
+        return {"w_in": _pre(P(f, "model"), lead), "b_in": _pre(P("model"), lead),
+                "w_out": _pre(P("model", f), lead), "b_out": _pre(P(None), lead)}
+    return {"w_gate": _pre(P(f, "model"), lead), "w_up": _pre(P(f, "model"), lead),
+            "w_down": _pre(P("model", f), lead)}
+
+
+def _moe_spec(cfg, f, lead=1) -> Dict[str, P]:
+    s = {"router": _pre(P(f, None), lead),
+         "w_gate": _pre(P("model", f, None), lead),
+         "w_up": _pre(P("model", f, None), lead),
+         "w_down": _pre(P("model", None, f), lead)}
+    if cfg.moe.dense_residual:
+        s["dense"] = {k: v for k, v in _ffn_spec(cfg, f, lead).items()}
+    return s
+
+
+def _ssd_spec(cfg, f, lead=1) -> Dict[str, P]:
+    return {"in_proj": _pre(P(f, "model"), lead),
+            "conv_w": _pre(P(None, "model"), lead),
+            "conv_b": _pre(P("model"), lead),
+            "A_log": _pre(P(None), lead), "D": _pre(P(None), lead),
+            "dt_bias": _pre(P(None), lead),
+            "norm": _pre(P("model"), lead),
+            "out_proj": _pre(P("model", f), lead)}
+
+
+def _rglru_spec(cfg, f, lead=1) -> Dict[str, P]:
+    return {"in_x": _pre(P(f, "model"), lead), "in_gate": _pre(P(f, "model"), lead),
+            "conv_w": _pre(P(None, "model"), lead), "conv_b": _pre(P("model"), lead),
+            "w_r": _pre(P(None, "model"), lead), "b_r": _pre(P("model"), lead),
+            "w_i": _pre(P(None, "model"), lead), "b_i": _pre(P("model"), lead),
+            "lam": _pre(P("model"), lead),
+            "out": _pre(P("model", f), lead)}
+
+
+def _block_spec(kind: str, cfg: ArchConfig, f, cross: bool, lead=1) -> Dict[str, Any]:
+    if kind == "attn":
+        s = {"ln1": _norm_spec(cfg, lead), "attn": _attn_spec(cfg, f, lead),
+             "ln2": _norm_spec(cfg, lead),
+             "ffn": _moe_spec(cfg, f, lead) if cfg.moe else _ffn_spec(cfg, f, lead)}
+        if cross:
+            s["lnx"] = _norm_spec(cfg, lead)
+            s["xattn"] = _attn_spec(cfg, f, lead)
+        return s
+    if kind == "ssd":
+        return {"ln": _norm_spec(cfg, lead), "ssd": _ssd_spec(cfg, f, lead)}
+    if kind == "rglru":
+        return {"ln1": _norm_spec(cfg, lead), "rg": _rglru_spec(cfg, f, lead),
+                "ln2": _norm_spec(cfg, lead), "ffn": _ffn_spec(cfg, f, lead)}
+    raise ValueError(kind)
+
+
+def param_specs(cfg: ArchConfig, *, fsdp: Optional[bool] = None,
+                multi_pod: bool = False) -> Params:
+    """PartitionSpec tree matching init_params(cfg).  With multi_pod, FSDP
+    shards over BOTH batch axes ('pod','data') — otherwise each pod holds a
+    full optimizer replica and the second pod buys no memory (measured:
+    §Perf iter 2)."""
+    want = cfg.fsdp if fsdp is None else fsdp
+    f = (("pod", "data") if multi_pod else "data") if want else None
+    cross = cfg.encoder is not None
+    t: Params = {"embed": P("model", f)}
+    stages = []
+    for unit, reps in cfg.stages():
+        stages.append(tuple(_block_spec(k, cfg, f, cross) for k in unit))
+    t["stages"] = tuple(stages)
+    t["final_norm"] = _norm_spec(cfg)
+    if not cfg.tie_embeddings:
+        t["lm_head"] = P(f, "model")
+    if cfg.rope_theta <= 0.0:
+        t["pos_embed"] = P(None, f)
+    if cfg.vision is not None:
+        t["projector"] = {"w1": P(None, f), "w2": P(f, None)}
+    if cfg.encoder is not None:
+        t["encoder"] = {"blocks": _block_spec("attn", cfg, f, cross=False),
+                        "final_norm": _norm_spec(cfg)}
+    return t
+
+
+def opt_state_specs(cfg: ArchConfig, pspecs: Params, has_v: bool) -> Params:
+    st = {"step": P(), "m": pspecs}
+    if has_v:
+        st["v"] = pspecs
+    return st
+
+
+def cache_specs(cfg: ArchConfig, multi_pod: bool) -> Params:
+    """Spec tree matching model.init_caches output (stacked per stage).
+    Built with the cache NamedTuples themselves so pytree structures match."""
+    from repro.models.attention import KVCache
+    from repro.models.rglru import RGLRUCache
+    from repro.models.ssm import SSMCache
+    b = batch_axes(multi_pod)
+    bspec = b if len(b) > 1 else b[0]
+    kv_model = "model" if cfg.n_kv_heads >= 8 else None
+    out = []
+    for unit, reps in cfg.stages():
+        stage = []
+        for kind in unit:
+            if kind == "attn":
+                kv = P(None, bspec, None, kv_model, None)
+                stage.append({"self": KVCache(k=kv, v=kv, pos=P(None))})
+            elif kind == "ssd":
+                stage.append({"ssm": SSMCache(
+                    conv=P(None, bspec, None, "model"),
+                    h=P(None, bspec, None, None, None),
+                    pos=P(None))})
+            elif kind == "rglru":
+                stage.append({"rg": RGLRUCache(
+                    conv=P(None, bspec, None, "model"),
+                    h=P(None, bspec, "model"),
+                    pos=P(None))})
+        out.append(tuple(stage))
+    return tuple(out)
+
+
+def sanitize_specs(spec_tree, abstract_tree, mesh):
+    """Drop sharding on any dim the mesh axes don't divide.
+
+    jax.jit's explicit in/out shardings require exact divisibility (unlike
+    internal GSPMD propagation); non-divisible dims (odd vocabs, kv_heads=8
+    on a 16-way model axis, batch=1 long-context decode) fall back to
+    replication.  Each fallback is an honest memory/roofline cost visible
+    in the dry-run — padding configs away is a §Perf iteration, not a
+    default.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, aval):
+        if not isinstance(spec, P):
+            return spec
+        shape = aval.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, ent in zip(shape, entries):
+            if ent is None:
+                out.append(None)
+                continue
+            axes = ent if isinstance(ent, tuple) else (ent,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            out.append(ent if dim % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ArchConfig, multi_pod: bool, kind: str) -> Dict[str, P]:
+    b = batch_axes(multi_pod)
+    bspec = b if len(b) > 1 else b[0]
+    s = {"tokens": P(bspec, None)}
+    if kind == "train":
+        pass
+    if cfg.vision is not None:
+        s["patches"] = P(bspec, None, None)
+    if cfg.encoder is not None:
+        s["frames"] = P(bspec, None, None)
+    return s

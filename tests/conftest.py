@@ -1,0 +1,32 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests see 1 CPU device (the dry-run's 512-device override is local to
+# repro.launch.dryrun, never set here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny(name: str, **over):
+    """Reduced config for a registered arch with optional overrides."""
+    from repro.configs import get_arch
+    cfg = get_arch(name).reduced()
+    return cfg.replace(**over) if over else cfg
+
+
+def make_batch(cfg, B=2, S=16, key=0):
+    import jax.numpy as jnp
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.encoder is not None:
+        batch["frames"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(k, 1), (B, cfg.encoder.n_frames, cfg.d_model))
+    if cfg.vision is not None:
+        batch["patches"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(k, 2), (B, cfg.vision.n_patches, cfg.vision.vit_dim))
+    return batch

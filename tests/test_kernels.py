@@ -1,0 +1,109 @@
+"""Per-kernel shape/dtype sweeps, interpret-mode vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedfa_agg import ops as agg_ops
+from repro.kernels.fedfa_agg import ref as agg_ref
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import attention as fa_attention
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd import ref as ssd_ref
+from repro.kernels.ssd.kernel import ssd_intra_chunk
+from repro.models.ssm import ssd_chunked_ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,hd", [
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 128, 8, 8, 128),
+    (2, 192, 192, 4, 1, 64),
+    (1, 64, 320, 2, 2, 32),       # cross-length
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96), (False, None)])
+def test_flash_attention_sweep(B, Sq, Sk, H, K, hd, dtype, causal, window):
+    if Sq != Sk and causal:
+        pytest.skip("causal cross-length not used by the stack")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    exp = fa_ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_ops_padding():
+    """ops wrapper pads ragged seq lens + head dims and unpads the result."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 100, 4, 48))
+    k = jax.random.normal(ks[1], (2, 100, 2, 48))
+    v = jax.random.normal(ks[2], (2, 100, 2, 48))
+    out = fa_attention(q, k, v, causal=True, use_kernel=True, interpret=True)
+    exp = fa_ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,S,nh,hp,N,Q", [
+    (2, 96, 4, 32, 16, 32),
+    (1, 128, 2, 64, 32, 64),
+    (2, 70, 3, 32, 16, 32),      # ragged: S % Q != 0
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(b, S, nh, hp, N, Q, dtype):
+    k = jax.random.PRNGKey(0)
+    x = (jax.random.normal(k, (b, S, nh, hp)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (b, S, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (nh,)) * 0.2)
+    B = (jax.random.normal(jax.random.fold_in(k, 3), (b, S, N)) * 0.3).astype(dtype)
+    C = (jax.random.normal(jax.random.fold_in(k, 4), (b, S, N)) * 0.3).astype(dtype)
+    y_k, h_k = ssd_ops.ssd(x, dt, A, B, C, Q, use_kernel=False, interpret=True)
+    y_r, h_r = ssd_chunked_ref(x, dt, A, B, C, Q)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), **_tol(dtype))
+
+
+def test_ssd_intra_chunk_vs_ref():
+    G, Q, nh, hp, N = 4, 32, 2, 32, 16
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (G, Q, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (G, Q, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (nh,)) * 0.1)
+    B = jax.random.normal(jax.random.fold_in(k, 3), (G, Q, N)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(k, 4), (G, Q, N)) * 0.3
+    yk, sk, Lk = ssd_intra_chunk(x, dt, A, B, C, interpret=True)
+    yr, sr, Lr = ssd_ref.ssd_intra_chunk_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Lk), np.asarray(Lr), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1000, 4096, 50_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_trimmed_norm_sweep(n, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (n,), dtype)
+    t = jnp.quantile(jnp.abs(w.astype(jnp.float32)), 0.95)
+    nk = agg_ops.trimmed_norm(w, t, interpret=True)
+    nr = jnp.sqrt(agg_ref.trimmed_sumsq_ref(w, t))
+    np.testing.assert_allclose(float(nk), float(nr), rtol=1e-3)
+
+
+@pytest.mark.parametrize("m,n", [(3, 512), (8, 5000), (16, 12_345)])
+def test_scaled_accum_sweep(m, n):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (m, n))
+    w = jax.random.uniform(jax.random.fold_in(k, 1), (m,))
+    mask = (jnp.arange(n) < int(0.7 * n)).astype(jnp.float32)
+    out = agg_ops.accumulate(x, w, mask, interpret=True)
+    exp = agg_ref.scaled_accum_ref(x, w, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)

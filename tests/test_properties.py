@@ -1,0 +1,128 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny
+
+from repro.core import fedfa
+from repro.core.masking import apply_mask_tree, axis_mask_tree
+from repro.models import model as model_mod
+from repro.models.attention import _attend_dense, attend_blocked
+from repro.models.masks import (ClientArch, depth_gates, graft_map,
+                                max_section_depths, stack_masks, width_masks,
+                                width_spec)
+
+CFG = tiny("smollm-135m").replace(n_layers=4, n_sections=2, vocab_size=128)
+PARAMS = model_mod.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(w=st.floats(0.2, 1.0))
+def test_width_spec_monotone_and_valid(w):
+    s = width_spec(CFG, w)
+    assert 1 <= s.n_kv_heads <= CFG.n_kv_heads
+    assert s.n_heads % s.n_kv_heads == 0
+    assert s.n_heads // s.n_kv_heads == CFG.n_heads // CFG.n_kv_heads
+    assert 0 < s.d_ff <= CFG.d_ff
+    assert 0 < s.d_model <= CFG.d_model
+    s2 = width_spec(CFG, min(1.0, w + 0.25))
+    assert s2.d_ff >= s.d_ff and s2.n_heads >= s.n_heads
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.tuples(st.integers(1, 2), st.integers(1, 2)))
+def test_graft_map_idempotent_and_bounded(d):
+    gm = np.asarray(graft_map(CFG, d))
+    assert (gm[gm] == gm).all()                # idempotent (maps to active)
+    g = np.asarray(depth_gates(CFG, d))
+    assert (g[gm] == 1.0).all()                # targets are active blocks
+    assert g.sum() == sum(d)
+
+
+@settings(max_examples=10, deadline=None)
+@given(w=st.sampled_from([0.25, 0.5, 0.75, 1.0]))
+def test_extraction_idempotent(w):
+    masks = width_masks(CFG, w)
+    ax = axis_mask_tree(CFG, masks)
+    p1 = apply_mask_tree(PARAMS, ax)
+    p2 = apply_mask_tree(p1, ax)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert float(jnp.abs(a - b).max()) == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(scale=st.floats(0.5, 4.0), nd=st.integers(1, 20))
+def test_aggregation_scale_equivariance(scale, nd):
+    """aggregate(c*P) == c*aggregate(P) for homogeneous clients without
+    scaling; with scaling, output is invariant to a COMMON rescale of all
+    clients... no: alpha normalizes to the mean norm, so common rescale
+    scales output by the same factor. Both checked."""
+    m = 2
+    ps = [model_mod.init_params(CFG, jax.random.PRNGKey(i + 5)) for i in range(m)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    scaled = jax.tree.map(lambda x: scale * x, stacked)
+    from repro.models.masks import full_client
+    fc = full_client(CFG)
+    masks = stack_masks([fc.masks(CFG)] * m)
+    gates = jnp.stack([fc.gates(CFG)] * m)
+    gmaps = jnp.stack([fc.graft(CFG)] * m)
+    ndv = jnp.full((m,), float(nd))
+    a1 = fedfa.aggregate(PARAMS, stacked, CFG, masks, gates, gmaps, ndv,
+                         graft=True, scale=True)
+    a2 = fedfa.aggregate(jax.tree.map(lambda x: scale * x, PARAMS), scaled,
+                         CFG, masks, gates, gmaps, ndv, graft=True, scale=True)
+    for x, y in zip(jax.tree.leaves(a1), jax.tree.leaves(a2)):
+        np.testing.assert_allclose(np.asarray(scale * x), np.asarray(y),
+                                   rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nd=st.lists(st.integers(1, 100), min_size=2, max_size=4))
+def test_aggregation_respects_data_weights(nd):
+    """gamma-weighted mean with N_c weights == np.average(weights=nd)."""
+    m = len(nd)
+    ps = [model_mod.init_params(CFG, jax.random.PRNGKey(i + 9)) for i in range(m)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    from repro.models.masks import full_client
+    fc = full_client(CFG)
+    masks = stack_masks([fc.masks(CFG)] * m)
+    gates = jnp.stack([fc.gates(CFG)] * m)
+    gmaps = jnp.stack([fc.graft(CFG)] * m)
+    ndv = jnp.asarray(nd, jnp.float32)
+    out = fedfa.aggregate(PARAMS, stacked, CFG, masks, gates, gmaps, ndv,
+                          graft=False, scale=False)
+    w = np.asarray(nd, np.float64) / sum(nd)
+    for leaf, *client_leaves in zip(jax.tree.leaves(out),
+                                    *[jax.tree.leaves(p) for p in ps]):
+        exp = sum(wi * np.asarray(ci, np.float64)
+                  for wi, ci in zip(w, client_leaves))
+        np.testing.assert_allclose(np.asarray(leaf), exp, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(17, 257), h=st.sampled_from([2, 4]),
+       causal=st.booleans())
+def test_blocked_attention_matches_dense(sq, h, causal):
+    ks = jax.random.split(jax.random.PRNGKey(sq), 3)
+    q = jax.random.normal(ks[0], (1, sq, h, 32))
+    k = jax.random.normal(ks[1], (1, sq, h // 2 or 1, 32))
+    v = jax.random.normal(ks[2], (1, sq, h // 2 or 1, 32))
+    o1 = attend_blocked(q, k, v, causal=causal, bq=64, bk=64)
+    o2 = _attend_dense(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(lam=st.floats(0.0, 4.0))
+def test_malicious_combination_linear(lam):
+    from repro.core.attacks import combine_malicious
+    g = PARAMS
+    h = jax.tree.map(lambda x: x + 1.0, g)
+    b = jax.tree.map(lambda x: x - 2.0, g)
+    out = combine_malicious(g, h, b, lam)
+    exp = jax.tree.map(lambda x: x + 1.0 + lam * (-2.0), g)
+    for a, e in zip(jax.tree.leaves(out), jax.tree.leaves(exp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e), atol=1e-4)

@@ -1,0 +1,121 @@
+"""Substrate tests: data, optimizers, schedules, checkpointing, serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data import partition, pipeline, synthetic
+from repro.models import model as model_mod
+from repro.optim import init_opt, make_schedule, opt_update
+
+
+def test_lm_stream_learnable_structure():
+    """Bigram structure: conditional entropy < marginal entropy."""
+    toks = synthetic.lm_stream(64, 200, 64, seed=0)
+    flat = toks.reshape(-1)
+    marg = np.bincount(flat, minlength=64) / flat.size
+    h_marg = -np.sum(marg * np.log(marg + 1e-12))
+    # conditional on previous token
+    joint = np.zeros((64, 64))
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            joint[a, b] += 1
+    cond = joint / np.maximum(joint.sum(1, keepdims=True), 1)
+    pprev = joint.sum(1) / joint.sum()
+    h_cond = -np.sum(pprev[:, None] * cond * np.log(cond + 1e-12))
+    assert h_cond < h_marg - 0.2
+
+
+def test_classification_separable():
+    prof = synthetic.make_class_profiles(4, 64, seed=0)
+    d = synthetic.classification(4, 64, 200, 32, profiles=prof, seed=1)
+    # naive bayes with the true profiles should classify well
+    logp = np.log(prof + 1e-9)
+    scores = logp[:, d["tokens"]].sum(-1)      # (C, N)
+    acc = (scores.argmax(0) == d["labels"]).mean()
+    assert acc > 0.9
+
+
+def test_noniid_partition_class_coverage():
+    parts = partition.noniid_partition(50, 10, class_frac=0.2, seed=0)
+    for p in parts:
+        assert len(p["classes"]) == 2
+        assert p["class_mask"].sum() == 2
+    iid = partition.iid_partition(10, 10, n_data_range=(100, 250), seed=0)
+    nd = [p["n_data"] for p in iid]
+    assert min(nd) >= 100 and max(nd) < 250
+
+
+def test_sgd_momentum_matches_manual():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 2.0)}
+    st = init_opt(p, "sgd")
+    p1, st = opt_update("sgd", p, g, st, 0.1, momentum=0.9, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1 - 0.1 * 2.0)
+    p2, st = opt_update("sgd", p1, g, st, 0.1, momentum=0.9, weight_decay=0.0)
+    # m2 = 0.9*2 + 2 = 3.8
+    np.testing.assert_allclose(np.asarray(p2["w"]), 0.8 - 0.38, rtol=1e-6)
+
+
+def test_adamw_step_finite_and_decays():
+    p = {"w": jnp.ones((8,))}
+    g = {"w": jnp.zeros((8,))}
+    st = init_opt(p, "adamw")
+    p1, _ = opt_update("adamw", p, g, st, 0.1, weight_decay=0.5)
+    assert float(p1["w"][0]) < 1.0             # pure weight decay shrinks
+
+
+@pytest.mark.parametrize("name", ["constant", "step", "cosine", "wsd"])
+def test_schedules_shape(name):
+    s = make_schedule(name, 0.1, 100, warmup=10)
+    vals = [float(s(jnp.asarray(t))) for t in [0, 10, 50, 99]]
+    assert all(v >= 0 for v in vals)
+    assert max(vals) <= 0.1 + 1e-6
+    if name in ("cosine", "wsd"):
+        assert vals[0] == 0.0                  # warmup from zero
+    if name == "step":
+        assert vals[-1] < vals[0]
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny("smollm-135m")
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, params, meta={"step": 7})
+    like = model_mod.init_params(cfg, jax.random.PRNGKey(1))
+    restored, meta = ckpt.restore(path, like)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_engine_greedy_deterministic():
+    from repro.launch.serve import Engine
+    cfg = tiny("smollm-135m")
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, capacity=64)
+    prompts = synthetic.lm_stream(cfg.vocab_size, 2, 16, seed=0)
+    o1 = eng.generate(prompts, max_new=8)
+    o2 = eng.generate(prompts, max_new=8)
+    assert o1.shape == (2, 8)
+    np.testing.assert_array_equal(o1, o2)
+
+
+def test_nas_zico_and_search():
+    from repro.core.nas import SearchSpace, evolutionary_search, zico_score
+    from repro.models.masks import ClientArch, max_section_depths
+    cfg = tiny("smollm-135m").replace(vocab_size=64)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 2, 16), 0, 64)
+    batches = {"tokens": toks}
+    s1 = zico_score(cfg, ClientArch(1.0, max_section_depths(cfg)), params, batches)
+    assert np.isfinite(s1)
+    best = evolutionary_search(cfg, params, batches, population=4,
+                               generations=1, seed=0)
+    assert 0 < best.width_mult <= 1.0
+    assert all(d >= 1 for d in best.section_depths)
