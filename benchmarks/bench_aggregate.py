@@ -1,0 +1,105 @@
+"""Aggregation engine benchmark: tree (per-leaf scan) vs flat (fused
+buffer) across cohort sizes and model sizes.
+
+Emits ``BENCH_aggregate.json`` — mean/p50 wall time per (model, m, engine)
+— so later PRs can track the perf trajectory.
+
+  PYTHONPATH=src python benchmarks/bench_aggregate.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _cohort(cfg, m, seed=0):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as model_mod
+    from repro.models.masks import ClientArch, full_client, stack_masks
+
+    g = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    pool = [ClientArch(0.25, (1, 1)), ClientArch(0.5, (2, 1)),
+            ClientArch(1.0, (1, 2)), full_client(cfg)]
+    archs = [pool[i % len(pool)] for i in range(m)]
+    noise = 0.05 * jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (m,), jnp.float32)
+    stacked = jax.tree.map(
+        lambda x: x[None] + noise.reshape((m,) + (1,) * x.ndim)
+        .astype(x.dtype), g)
+    masks = stack_masks([a.masks(cfg) for a in archs])
+    gates = jnp.stack([a.gates(cfg) for a in archs])
+    gmaps = jnp.stack([a.graft(cfg) for a in archs])
+    nd = jnp.asarray(np.arange(1, m + 1), jnp.float32)
+    return g, stacked, masks, gates, gmaps, nd
+
+
+def _time_engine(engine, cfg, args_, iters):
+    import jax
+    from repro.core import fedfa
+
+    g, stacked, masks, gates, gmaps, nd = args_
+
+    @jax.jit
+    def run(g, s, mk, gt, gm, nd):
+        return fedfa.aggregate(g, s, cfg, mk, gt, gm, nd,
+                               graft=True, scale=True, engine=engine)
+
+    out = run(g, stacked, masks, gates, gmaps, nd)      # compile + warm
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(g, stacked, masks, gates, gmaps, nd))
+        ts.append(time.perf_counter() - t0)
+    ts = np.asarray(ts)
+    return dict(mean_s=round(float(ts.mean()), 5),
+                p50_s=round(float(np.median(ts)), 5),
+                iters=iters)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="+",
+                    default=["smollm-135m", "tinyllama-1.1b"])
+    ap.add_argument("--cohorts", nargs="+", type=int, default=[4, 16, 64])
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--quick", action="store_true",
+                    help="one model, m in {4, 16}, fewer iters")
+    ap.add_argument("--out", default="BENCH_aggregate.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.models, args.cohorts, args.iters = args.models[:1], [4, 16], 5
+
+    import jax
+    from repro.configs import get_arch
+
+    results = {"backend": jax.default_backend(), "engines": ["tree", "flat"],
+               "runs": {}}
+    for name in args.models:
+        cfg = get_arch(name).reduced().replace(n_layers=4, n_sections=2)
+        for m in args.cohorts:
+            cohort = _cohort(cfg, m)
+            rec = {}
+            for engine in ("tree", "flat"):
+                rec[engine] = _time_engine(engine, cfg, cohort, args.iters)
+            rec["flat_speedup"] = round(
+                rec["tree"]["mean_s"] / max(rec["flat"]["mean_s"], 1e-9), 3)
+            results["runs"][f"{name}/m{m}"] = rec
+            print(f"{name} m={m:3d}  tree {rec['tree']['mean_s']*1e3:8.1f} ms"
+                  f"  flat {rec['flat']['mean_s']*1e3:8.1f} ms"
+                  f"  speedup {rec['flat_speedup']:.2f}x", flush=True)
+
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       args.out) if not os.path.isabs(args.out) else args.out
+    with open(os.path.normpath(out), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {os.path.normpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -98,8 +98,11 @@ def bench_aggregation():
     gates = jnp.stack([fc.gates(cfg)] * m)
     gmaps = jnp.stack([fc.graft(cfg)] * m)
     nd = jnp.ones((m,))
+    # flat engine = the production server path (see benchmarks/bench_aggregate
+    # for the tree-vs-flat comparison)
     f = jax.jit(lambda g, s: fedfa.aggregate(g, s, cfg, masks, gates, gmaps,
-                                             nd, graft=True, scale=True))
+                                             nd, graft=True, scale=True,
+                                             engine="flat"))
     jax.block_until_ready(f(p, stacked))
     n_params = sum(x.size for x in jax.tree.leaves(p))
     t0 = time.time()

@@ -139,14 +139,29 @@ def _weighted_contribution(cfg: ArchConfig, p_c: Params, masks_c: WidthMasks,
 def aggregate(global_params: Params, stacked_params: Params, cfg: ArchConfig,
               masks: WidthMasks, gates: jax.Array, gmaps: jax.Array,
               n_data: jax.Array, *, graft: bool = True, scale: bool = True,
-              trim: float = 0.95, eps: float = 1e-12) -> Params:
+              trim: float = 0.95, eps: float = 1e-12, engine: str = "tree",
+              use_kernel: Optional[bool] = None,
+              interpret: bool = False) -> Params:
     """FedFA Alg. 1 lines 11-24 (graft=scale=True) and the partial-
     aggregation baselines HeteroFL/FlexiFed/NeFL (graft=scale=False).
 
     stacked_params / masks / gates / gmaps / n_data carry a leading client
     axis m.  Returns the new global model; elements no client updated keep
     their previous global value (γ = 0 case).
+
+    engine="tree" runs the original per-leaf tree-map/scan implementation;
+    engine="flat" runs the same algorithm on one contiguous (m, N) buffer
+    with fused segment kernels (repro.core.flat), dispatching to the Pallas
+    fedfa_agg kernels on TPU.  use_kernel/interpret are flat-engine knobs.
     """
+    if engine == "flat":
+        from repro.core import flat
+        return flat.aggregate_flat(
+            global_params, stacked_params, cfg, masks, gates, gmaps, n_data,
+            graft=graft, scale=scale, trim=trim, eps=eps,
+            use_kernel=use_kernel, interpret=interpret)
+    if engine != "tree":
+        raise ValueError(f"unknown aggregation engine {engine!r}")
     alphas = None
     if scale:
         def norm_body(_, xs):

@@ -1,0 +1,274 @@
+"""Flat-buffer aggregation engine: Alg. 1 on one contiguous (m, N) buffer.
+
+The tree engine in ``repro.core.fedfa`` runs Alg. 1 as per-leaf tree-maps
+inside a ``lax.scan`` over clients — O(leaves x clients) tiny dispatches and
+a serial reduction.  This module packs the parameter pytree into a single
+contiguous f32 buffer per client (``FlatIndex`` records the static layout:
+leaf offsets/shapes/dtypes, per-row segment ids, depth-stage info and graft
+gather maps) and reimplements the algorithm as a handful of segment-wise
+passes over the flat cohort buffer:
+
+  * graft (Alg. 2)          — one flat gather per client,
+  * trimmed norms (§4.3)    — per-leaf row quantiles vmapped over clients,
+                              trimmed sum-of-squares via the Pallas
+                              ``trimmed_sumsq`` kernel on TPU,
+  * (M', γ) accumulation    — two fused weighted reductions over the client
+                              axis via the Pallas ``scaled_accum`` kernel on
+                              TPU (pure-jnp ``ref`` fallback on CPU).
+
+Per-client weights that vary only per (leaf, row) — depth gates, data
+counts, scaling factors α — live in small (m, n_segments) tables gathered
+onto the buffer through ``row_of``, so the elementwise work is a single
+fused pass regardless of how many leaves the model has.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import tree_flatten_with_path
+
+from repro.configs.base import ArchConfig
+# one classification rule shared with the tree engine (fedfa imports this
+# module only lazily, so no cycle)
+from repro.core.fedfa import _path_stage_info
+from repro.core.masking import (AX, active_fraction, axis_mask_tree,
+                                mask_density)
+from repro.kernels.fedfa_agg import ops as agg_ops
+from repro.models.masks import WidthMasks
+
+Params = Dict[str, Any]
+_IS_AX = lambda x: isinstance(x, AX)
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    path: Tuple
+    shape: Tuple[int, ...]
+    dtype: Any
+    offset: int
+    size: int
+    stacked: bool            # has a leading repeat axis
+    stage: Optional[int]     # stage index for "stages" leaves, else None
+    lead: int                # rows R (1 for unstacked leaves)
+    rest: int                # elements per row
+    seg0: int                # first global segment id of this leaf
+
+
+class FlatIndex:
+    """Static flat layout of a parameter pytree (host-side numpy).
+
+    Segments are (leaf, row) pairs: one per repeat of a depth-stacked leaf,
+    one per unstacked leaf — exactly the granularity at which trimmed norms,
+    scaling factors and depth gates vary.
+    """
+
+    def __init__(self, params: Params):
+        leaves, self.treedef = tree_flatten_with_path(params)
+        specs, row_of, seg_row, seg_stage0 = [], [], [], []
+        g_base, g_row, g_rest = [], [], []
+        off = seg = 0
+        for path, x in leaves:
+            stacked, stage = _path_stage_info(path)
+            shape = tuple(x.shape)
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            lead = shape[0] if stacked else 1
+            rest = size // lead
+            specs.append(LeafSpec(path, shape, jnp.result_type(x), off, size,
+                                  stacked, stage, lead, rest, seg))
+            row_of.append(np.repeat(
+                np.arange(seg, seg + lead, dtype=np.int32), rest))
+            seg_row.extend(range(lead))
+            seg_stage0.extend([stacked and stage == 0] * lead)
+            rel = np.arange(size, dtype=np.int64)
+            if stacked and stage == 0:       # graft gathers along the rows
+                g_base.append(off + rel % rest)
+                g_row.append((rel // rest).astype(np.int32))
+                g_rest.append(np.full(size, rest, np.int32))
+            else:                            # identity (g_rest = 0)
+                g_base.append(off + rel)
+                g_row.append(np.zeros(size, np.int32))
+                g_rest.append(np.zeros(size, np.int32))
+            off += size
+            seg += lead
+        self.leaves = tuple(specs)
+        self.n = off
+        self.n_segments = seg
+        self.row_of = np.concatenate(row_of)
+        self.seg_row = np.asarray(seg_row, np.int32)
+        self.seg_stage0 = np.asarray(seg_stage0)
+        self.g_base = np.concatenate(g_base).astype(np.int32)
+        self.g_row = np.concatenate(g_row)
+        self.g_rest = np.concatenate(g_rest)
+
+
+_INDEX_CACHE: Dict[Any, FlatIndex] = {}
+
+
+def get_index(params: Params) -> FlatIndex:
+    """Build (or fetch the cached) FlatIndex for this params structure."""
+    leaves, _ = tree_flatten_with_path(params)
+    key = tuple((str(path), tuple(x.shape), jnp.result_type(x).name)
+                for path, x in leaves)
+    idx = _INDEX_CACHE.get(key)
+    if idx is None:
+        idx = _INDEX_CACHE[key] = FlatIndex(params)
+    return idx
+
+
+def _check_layout(index: FlatIndex, leaves, stacked: bool) -> None:
+    """Trace-time guard: the tree being packed must have the leaf layout the
+    index was built from (jax.tree.leaves order == tree_flatten_with_path
+    order), else offsets would silently misalign."""
+    drop = 1 if stacked else 0
+    if len(leaves) != len(index.leaves) or any(
+            tuple(x.shape[drop:]) != s.shape
+            for x, s in zip(leaves, index.leaves)):
+        raise ValueError("tree structure does not match FlatIndex layout")
+
+
+def flatten(index: FlatIndex, tree: Params) -> jax.Array:
+    """Pack one pytree into a contiguous (N,) f32 buffer."""
+    leaves = jax.tree.leaves(tree)
+    _check_layout(index, leaves, stacked=False)
+    return jnp.concatenate(
+        [jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def flatten_stacked(index: FlatIndex, tree: Params) -> jax.Array:
+    """Pack a client-stacked pytree (leading axis m) into (m, N) f32."""
+    leaves = jax.tree.leaves(tree)
+    _check_layout(index, leaves, stacked=True)
+    m = leaves[0].shape[0]
+    return jnp.concatenate(
+        [x.reshape(m, -1).astype(jnp.float32) for x in leaves], axis=1)
+
+
+def unflatten(index: FlatIndex, buf: jax.Array) -> Params:
+    """Unpack a (N,) buffer back into the pytree (original leaf dtypes)."""
+    outs = [buf[s.offset:s.offset + s.size].reshape(s.shape).astype(s.dtype)
+            for s in index.leaves]
+    return jax.tree_util.tree_unflatten(index.treedef, outs)
+
+
+def _density_and_fraction(cfg: ArchConfig, index: FlatIndex, mk: WidthMasks):
+    """One client's flat 0/1 width-mask density (N,) and per-leaf active
+    fraction (n_leaves,)."""
+    ax = axis_mask_tree(cfg, mk)
+    by_path = dict(tree_flatten_with_path(ax, is_leaf=_IS_AX)[0])
+    dens, fracs = [], []
+    for spec in index.leaves:
+        axl = by_path[spec.path]
+        d = jnp.broadcast_to(mask_density(spec.shape, axl), spec.shape)
+        dens.append(jnp.ravel(d).astype(jnp.float32))
+        fracs.append(active_fraction(axl))
+    return jnp.concatenate(dens), jnp.stack(fracs)
+
+
+def _graft_flat(index: FlatIndex, buf: jax.Array, gmap: jax.Array) -> jax.Array:
+    """Alg. 2 on the flat buffer: one gather (identity off stage 0)."""
+    src = jnp.asarray(index.g_base) \
+        + jnp.take(gmap, jnp.asarray(index.g_row), mode="clip") \
+        * jnp.asarray(index.g_rest)
+    return jnp.take(buf, src, mode="clip")
+
+
+def _row_quantile(rows_abs: jax.Array, q: jax.Array, trim: float) -> jax.Array:
+    """Per-row ``jnp.quantile(rows_abs, q, axis=-1)`` with per-client q,
+    computed exactly from the top-(1-trim) tail via ``lax.top_k`` — the only
+    part of the sorted order the threshold can touch, since q >= trim.
+    O(L log k) instead of a full O(L log L) sort.  rows_abs (m, R, L),
+    q (m,) -> (m, R)."""
+    m, R, L = rows_abs.shape
+    k = min(L, int(np.ceil((1.0 - trim) * (L - 1))) + 2)
+    top = jax.lax.top_k(rows_abs, k)[0]            # (m, R, k) descending
+    p = q * (L - 1)                                # fractional sort position
+    i0 = jnp.floor(p)
+    frac = (p - i0).astype(rows_abs.dtype)
+    d0 = (L - 1) - i0.astype(jnp.int32)            # descending index of floor
+    d1 = jnp.maximum(d0 - 1, 0)                    # descending index of ceil
+    take = lambda d: jnp.take_along_axis(
+        top, jnp.broadcast_to(d[:, None, None], (m, R, 1)), axis=-1,
+        mode="clip")[..., 0]
+    v0, v1 = take(d0), take(d1)
+    return v0 + (v1 - v0) * frac[:, None]
+
+
+def _rows_trimmed_sq(rows: jax.Array, t: jax.Array, use_kernel: bool,
+                     interpret: bool) -> jax.Array:
+    """Σ w²·[|w|<=t] over the last axis. rows (m, R, L), t (m, R) -> (m, R)."""
+    if use_kernel or interpret:
+        f = lambda w, s: agg_ops.trimmed_norm(
+            w, s, use_kernel=use_kernel, interpret=interpret)
+        nrm = jax.vmap(jax.vmap(f))(rows, t)
+        return nrm * nrm
+    return jnp.sum(jnp.where(jnp.abs(rows) <= t[..., None], rows * rows, 0.0),
+                   axis=-1)
+
+
+def aggregate_flat(global_params: Params, stacked_params: Params,
+                   cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
+                   gmaps: jax.Array, n_data: jax.Array, *, graft: bool = True,
+                   scale: bool = True, trim: float = 0.95, eps: float = 1e-12,
+                   use_kernel: Optional[bool] = None,
+                   interpret: bool = False) -> Params:
+    """Alg. 1 on the flat cohort buffer; numerically matches the tree engine
+    (``fedfa.aggregate``) within float tolerance for every strategy preset."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    index = get_index(global_params)
+    m = n_data.shape[0]
+
+    g_flat = flatten(index, global_params)                          # (N,)
+    x = flatten_stacked(index, stacked_params)                      # (m, N)
+    dens, fracs = jax.vmap(
+        functools.partial(_density_and_fraction, cfg, index))(masks)
+    x_g = jax.vmap(functools.partial(_graft_flat, index))(x, gmaps) \
+        if graft else x
+
+    if graft:
+        dwrow = None   # grafting weights every depth slot equally (1.0)
+    else:  # depth gates weight stage-0 rows; everything else weight 1
+        dwrow = jnp.where(jnp.asarray(index.seg_stage0)[None, :],
+                          jnp.take(gates, jnp.asarray(index.seg_row), axis=1,
+                                   mode="clip"),
+                          1.0)
+
+    alpha = None
+    if scale:
+        xm = x_g * dens
+        cols = []
+        for li, spec in enumerate(index.leaves):
+            rows = jnp.abs(xm[:, spec.offset:spec.offset + spec.size]
+                           .reshape(m, spec.lead, spec.rest))
+            # shifted quantile: the trim-quantile of active magnitudes equals
+            # the 1-(1-trim)·f quantile of the zero-padded row
+            q = 1.0 - (1.0 - trim) * fracs[:, li]
+            t = _row_quantile(rows, q, trim)
+            cols.append(jnp.sqrt(
+                _rows_trimmed_sq(rows, t, use_kernel, interpret)))
+        norms = jnp.concatenate(cols, axis=1)                       # (m, S)
+        alpha = jnp.mean(norms, axis=0, keepdims=True) \
+            / jnp.maximum(norms, eps)
+
+    row_of = jnp.asarray(index.row_of)
+    gather = lambda w: jnp.take(w, row_of, axis=1, mode="clip")     # (m, N)
+    if alpha is None:
+        warow = dwrow
+    else:
+        warow = alpha if dwrow is None else dwrow * alpha
+    contrib = x_g * dens if warow is None else x_g * dens * gather(warow)
+    counts = dens if dwrow is None else dens * gather(dwrow)
+    ones_n = jnp.ones((index.n,), jnp.float32)
+    Mp = agg_ops.accumulate(contrib, n_data, ones_n,
+                            use_kernel=use_kernel, interpret=interpret)
+    Gm = agg_ops.accumulate(counts, n_data, ones_n,
+                            use_kernel=use_kernel, interpret=interpret)
+
+    upd = Mp / jnp.maximum(Gm, eps)
+    out = jnp.where(Gm > 0, upd, g_flat)   # γ = 0 keeps the global value
+    return unflatten(index, out)

@@ -42,6 +42,7 @@ class FLConfig:
     strategy: str = "fedfa"
     task: str = "lm"
     trim: float = 0.95
+    agg_engine: str = "flat"            # "flat" (fused buffer) | "tree"
     seed: int = 0
 
 
@@ -110,7 +111,7 @@ def fl_round(global_params: Params, cfg: ArchConfig, fl: FLConfig,
 
     new_global = fedfa.aggregate_strategy(
         fl.strategy, global_params, updated, cfg, masks, gates, gmaps, nd,
-        trim=fl.trim)
+        trim=fl.trim, engine=fl.agg_engine)
     return new_global, jnp.mean(losses)
 
 

@@ -31,6 +31,7 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--agg-engine", choices=["flat", "tree"], default="flat")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
@@ -41,7 +42,7 @@ def main() -> None:
     specs = [ClientSpec(arch=pool[i % len(pool)], n_data=100 + i)
              for i in range(args.clients)]
     fl = FLConfig(local_steps=args.local_steps, lr=0.05, strategy="fedfa",
-                  task="lm")
+                  task="lm", agg_engine=args.agg_engine)
     mesh = make_production_mesh()
 
     params_abs = jax.eval_shape(
@@ -67,7 +68,7 @@ def main() -> None:
             jax.random.PRNGKey(0))
         compiled = lowered.compile()
     rec = dict(arch=args.arch, workload="fedfa_round", mesh="16x16",
-               clients=args.clients,
+               clients=args.clients, agg_engine=args.agg_engine,
                lower_compile_s=round(time.time() - t0, 1))
     ma = compiled.memory_analysis()
     rec["memory"] = dict(argument_bytes=ma.argument_size_in_bytes,

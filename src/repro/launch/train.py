@@ -88,7 +88,8 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
            participation: float = 0.5, seed: int = 0,
            eval_every: int = 5, task: str = "cls",
            width_mults=(0.25, 0.5, 0.75, 1.0),
-           arch_mode: str = "width", quiet: bool = False) -> dict:
+           arch_mode: str = "width", agg_engine: str = "flat",
+           quiet: bool = False) -> dict:
     import jax
     import jax.numpy as jnp
     from repro.configs import get_arch
@@ -120,7 +121,7 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
     profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size, seed=seed)
     fl = FLConfig(participation=participation, local_steps=local_steps,
                   lr=lr, attack_lambda=attack_lambda, strategy=strategy,
-                  task=task, seed=seed)
+                  task=task, agg_engine=agg_engine, seed=seed)
 
     hist = {"round": [], "loss": [], "global_acc": [], "local_acc": []}
     test = pipeline.eval_batch_cls(n_classes, cfg.vocab_size, 256, seq_len,
@@ -201,6 +202,7 @@ def main() -> None:
     ap.add_argument("--noniid", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--agg-engine", choices=["flat", "tree"], default="flat")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mode == "dense":
@@ -210,7 +212,8 @@ def main() -> None:
                      strategy=args.strategy,
                      malicious_frac=args.malicious_frac,
                      attack_lambda=args.attack_lambda, noniid=args.noniid,
-                     batch=args.batch, seq_len=args.seq_len)
+                     batch=args.batch, seq_len=args.seq_len,
+                     agg_engine=args.agg_engine)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=1)

@@ -41,6 +41,7 @@ def test_round_all_strategies(strategy):
     assert delta > 0
 
 
+@pytest.mark.slow
 def test_attack_perturbs_fedfa_less_than_partial():
     """The paper's core claim, miniature: under a strong backdoor (lambda
     large, attacker on the largest arch), FedFA's global model moves less
@@ -65,13 +66,15 @@ def test_attack_perturbs_fedfa_less_than_partial():
     assert outs["fedfa"] < outs["nefl"], outs
 
 
-def test_sharded_round_on_host_mesh():
+@pytest.mark.parametrize("engine", ["flat", "tree"])
+def test_sharded_round_on_host_mesh(engine):
     """The SPMD FL round lowers and runs under a (1,1) mesh with the client
-    axis marked for the data axis — the same program the pod runs."""
+    axis marked for the data axis — the same program the pod runs — with
+    either aggregation engine."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_host_mesh
     cfg, params, specs, batches = _setup()
-    fl = FLConfig(local_steps=2, lr=0.05, strategy="fedfa")
+    fl = FLConfig(local_steps=2, lr=0.05, strategy="fedfa", agg_engine=engine)
     mesh = make_host_mesh()
     with mesh:
         f = jax.jit(lambda p, b, k: fl_round(p, cfg, fl, specs, b, k),
@@ -82,6 +85,7 @@ def test_sharded_round_on_host_mesh():
     assert jnp.isfinite(loss)
 
 
+@pytest.mark.slow
 def test_fl_converges_on_classification():
     from repro.launch.train import run_fl
     hist = run_fl("smollm-135m", rounds=6, n_clients=8, strategy="fedfa",

@@ -107,3 +107,48 @@ def test_scaled_accum_sweep(m, n):
     out = agg_ops.accumulate(x, w, mask, interpret=True)
     exp = agg_ref.scaled_accum_ref(x, w, mask)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+# Edge cases hit by the flat aggregation engine (interpret mode = the TPU
+# kernel code path executed on CPU).
+
+@pytest.mark.parametrize("n", [1, 127, 129, 2049, 4097])
+def test_trimmed_norm_ragged_lengths(n):
+    """Lengths not divisible by the 128-lane tile: zero-padding must not
+    perturb the trimmed sum (|0| <= t contributes 0)."""
+    w = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    t = jnp.quantile(jnp.abs(w), 0.95)
+    nk = agg_ops.trimmed_norm(w, t, use_kernel=True, interpret=True)
+    nr = jnp.sqrt(agg_ref.trimmed_sumsq_ref(w, t))
+    np.testing.assert_allclose(float(nk), float(nr), rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [130, 4097])
+def test_scaled_accum_single_client(n):
+    """m=1 degenerates to an elementwise scale; kernel must handle the
+    single-row client axis."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n))
+    w = jnp.asarray([2.5])
+    mask = (jnp.arange(n) % 3 != 0).astype(jnp.float32)
+    out = agg_ops.accumulate(x, w, mask, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(2.5 * x[0] * mask),
+                               atol=1e-5)
+
+
+def test_trimmed_norm_all_masked_is_zero_not_nan():
+    """An all-masked segment (every weight zeroed) has trimmed norm 0."""
+    w = jnp.zeros((1000,))
+    nk = agg_ops.trimmed_norm(w, jnp.asarray(0.0), use_kernel=True,
+                              interpret=True)
+    assert float(nk) == 0.0 and np.isfinite(float(nk))
+
+
+def test_scaled_accum_all_masked_segment():
+    """γ=0 segments: a zero mask yields exactly zero (the engine then keeps
+    the previous global value instead of dividing 0/0 into NaN)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 256))
+    w = jnp.ones((4,))
+    out = agg_ops.accumulate(x, w, jnp.zeros((256,)), use_kernel=True,
+                             interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+    assert not bool(jnp.isnan(out).any())
