@@ -1,0 +1,16 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: tier1 check bench-round bench-aggregate
+
+tier1:            ## fast test suite (the driver's acceptance gate)
+	$(PY) -m pytest -x -q
+
+check:            ## tier-1 tests + resident-round smoke bench (CI gate)
+	$(PY) benchmarks/run.py --check
+
+bench-round:      ## resident vs per-round driver, m in {4,16,64} -> BENCH_round.json
+	$(PY) benchmarks/bench_round.py
+
+bench-aggregate:  ## flat vs tree aggregation engines -> BENCH_aggregate.json
+	$(PY) benchmarks/bench_aggregate.py

@@ -1,0 +1,148 @@
+"""FL round-path benchmark: resident driver vs per-round dispatch.
+
+The resident driver (``repro.core.round``) runs the whole round — vmapped
+local training + flat aggregation — as one jitted program over donated
+(N,)/(m, N) buffers; the per-round path re-stacks runtimes and eagerly
+dispatches ``server.fl_round`` every round (what ``run_fl`` did before the
+resident driver).  Emits ``BENCH_round.json`` — rounds/sec per (m, driver)
+— the perf trajectory anchor for the round path.
+
+  PYTHONPATH=src python benchmarks/bench_round.py [--smoke] [--min-speedup X]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _setup(m, local_steps, batch, seq_len, seed=0):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core.server import FLConfig, make_client_specs
+    from repro.data import partition as part_mod
+    from repro.data import pipeline, synthetic
+    from repro.launch.train import client_arch_pool
+    from repro.models import model as model_mod
+
+    n_classes = 10
+    cfg = get_arch("smollm-135m").reduced().replace(
+        n_layers=4, n_sections=2, vocab_size=64, tie_embeddings=False)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    specs = make_client_specs(cfg, m, archs=client_arch_pool(cfg, "width"),
+                              seed=seed)
+    parts = part_mod.iid_partition(m, n_classes, seed=seed)
+    profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size,
+                                             seed=seed)
+    batches_np = pipeline.round_batches_cls(
+        parts, list(range(m)), n_classes, cfg.vocab_size,
+        local_steps=local_steps, batch=batch, seq_len=seq_len,
+        profiles=profiles, seed=seed)
+    batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
+    fl = FLConfig(local_steps=local_steps, lr=0.05, strategy="fedfa",
+                  task="cls", agg_engine="flat")
+    return cfg, fl, params, specs, batches
+
+
+def _time_per_round(cfg, fl, params, specs, batches, rounds):
+    import jax
+    from repro.core.server import fl_round
+
+    key = jax.random.PRNGKey(1)
+    p, _ = fl_round(params, cfg, fl, specs, batches,
+                    jax.random.fold_in(key, 0))       # warm dispatch caches
+    jax.block_until_ready(jax.tree.leaves(p)[0])
+    p = params
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        p, loss = fl_round(p, cfg, fl, specs, batches,
+                           jax.random.fold_in(key, r))
+    jax.block_until_ready(jax.tree.leaves(p)[0])
+    return time.perf_counter() - t0
+
+
+def _time_resident(cfg, fl, params, specs, batches, rounds):
+    import jax
+    from repro.core import flat
+    from repro.core.round import ResidentDriver
+
+    key = jax.random.PRNGKey(1)
+    index = flat.get_index(params)
+    driver = ResidentDriver(cfg, fl, index)
+    g_buf = flat.flatten(index, params)
+    g_buf, _ = driver.round(g_buf, specs, batches,
+                            jax.random.fold_in(key, 0))  # compile + warm
+    jax.block_until_ready(g_buf)
+    t0 = time.perf_counter()
+    for r in range(1, rounds + 1):
+        g_buf, loss = driver.round(g_buf, specs, batches,
+                                   jax.random.fold_in(key, r))
+    jax.block_until_ready(g_buf)
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cohorts", nargs="+", type=int, default=[4, 16, 64])
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="timed rounds per (m, driver)")
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="m=4 only, 3 rounds — the tier-1 CI configuration")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit 1 if resident/per-round rounds/sec falls "
+                         "below this for any cohort size")
+    ap.add_argument("--out", default="BENCH_round.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.cohorts, args.rounds = [4], 3
+
+    import jax
+
+    results = {"backend": jax.default_backend(),
+               "drivers": ["per_round", "resident"],
+               "config": {"rounds": args.rounds, "local_steps": args.local_steps,
+                          "batch": args.batch, "seq_len": args.seq_len},
+               "runs": {}}
+    ok = True
+    for m in args.cohorts:
+        cfg, fl, params, specs, batches = _setup(
+            m, args.local_steps, args.batch, args.seq_len)
+        dt_pr = _time_per_round(cfg, fl, params, specs, batches, args.rounds)
+        dt_res = _time_resident(cfg, fl, params, specs, batches, args.rounds)
+        rec = {
+            "per_round": {"mean_s": round(dt_pr / args.rounds, 5),
+                          "rounds_per_s": round(args.rounds / dt_pr, 3)},
+            "resident": {"mean_s": round(dt_res / args.rounds, 5),
+                         "rounds_per_s": round(args.rounds / dt_res, 3)},
+            "resident_speedup": round(dt_pr / max(dt_res, 1e-9), 3),
+        }
+        results["runs"][f"m{m}"] = rec
+        print(f"m={m:3d}  per-round {rec['per_round']['rounds_per_s']:7.2f} r/s"
+              f"  resident {rec['resident']['rounds_per_s']:7.2f} r/s"
+              f"  speedup {rec['resident_speedup']:.2f}x", flush=True)
+        if args.min_speedup is not None \
+                and rec["resident_speedup"] < args.min_speedup:
+            print(f"FAIL: resident speedup {rec['resident_speedup']:.2f}x "
+                  f"< required {args.min_speedup:.2f}x at m={m}", flush=True)
+            ok = False
+
+    out = args.out if os.path.isabs(args.out) else os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                     args.out))
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

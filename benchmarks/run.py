@@ -113,7 +113,37 @@ def bench_aggregation():
          f"params_per_s={m*n_params/dt:.2e}")
 
 
+def check() -> None:
+    """Tier-1 CI gate: the repo's fast test suite plus a smoke benchmark of
+    the resident round driver, so perf regressions on the round path fail
+    loudly alongside correctness ones.  Exits non-zero on any failure.
+
+        PYTHONPATH=src python benchmarks/run.py --check
+    """
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    steps = [
+        ("tier-1 tests", [sys.executable, "-m", "pytest", "-x", "-q"]),
+        ("round-path smoke bench",
+         [sys.executable, os.path.join(root, "benchmarks", "bench_round.py"),
+          "--smoke", "--min-speedup", "1.5"]),
+    ]
+    for name, cmd in steps:
+        print(f"== {name}: {' '.join(cmd)}", flush=True)
+        rc = subprocess.call(cmd, cwd=root, env=env)
+        if rc != 0:
+            print(f"CHECK FAILED at {name} (exit {rc})", flush=True)
+            sys.exit(rc)
+    print("CHECK OK", flush=True)
+
+
 def main() -> None:
+    if "--check" in sys.argv:
+        check()
+        return
     quick = "--full" not in sys.argv
     os.makedirs("results", exist_ok=True)
     print("name,us_per_call,derived")

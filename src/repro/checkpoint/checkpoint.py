@@ -25,6 +25,29 @@ def save(path: str, tree: Any, meta: Dict[str, Any] | None = None) -> None:
         json.dump({"names": names, "meta": meta or {}}, f)
 
 
+def save_from_buffer(path: str, index, buf, meta: Dict[str, Any] | None = None) -> None:
+    """Checkpoint a resident flat buffer (see ``repro.core.round``).
+
+    The (N,) f32 buffer is unflattened back to the original leaf dtypes only
+    here, at the eval/checkpoint boundary — the training loop itself never
+    leaves flat space.  ``index`` is the ``flat.FlatIndex`` the buffer was
+    packed with; checkpoints written this way are byte-compatible with
+    ``save``/``restore`` on the equivalent pytree.
+    """
+    from repro.core import flat
+    save(path, flat.unflatten(index, buf),
+         meta=dict(meta or {}, flat_n=int(index.n)))
+
+
+def restore_to_buffer(path: str, like: Any) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Restore a checkpoint straight onto the resident flat representation:
+    returns (FlatIndex, (N,) f32 buffer, meta) ready for ``run_rounds``."""
+    from repro.core import flat
+    tree, meta = restore(path, like)
+    index = flat.get_index(tree)
+    return index, flat.flatten(index, tree), meta
+
+
 def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
     """Restore into the structure of ``like`` (shape/dtype-checked)."""
     with open(path + ".json") as f:

@@ -7,7 +7,7 @@ it) so padded-dense simulation stays exactly on the small-model manifold.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +26,11 @@ def local_update(global_params: Params, cfg: ArchConfig, batches, *,
                  lr: float, task: str = "lm",
                  class_mask: Optional[jax.Array] = None,
                  optimizer: Optional[str] = None,
-                 momentum: float = 0.9, weight_decay: float = 1e-4) -> Params:
+                 momentum: float = 0.9,
+                 weight_decay: float = 1e-4) -> Tuple[Params, jax.Array]:
     """batches: pytree with leading step axis, e.g. {'tokens': (E, B, S)}.
-    Returns the client's updated (masked) model."""
+    Returns ``(params, losses)``: the client's updated (masked) model and
+    the (E,) per-step training losses."""
     ax = axis_mask_tree(cfg, masks)
     params = apply_mask_tree(global_params, ax)        # Alg. 3: distribution
     opt_name = optimizer or cfg.optimizer

@@ -24,6 +24,7 @@ fused pass regardless of how many leaves the model has.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
@@ -106,17 +107,29 @@ class FlatIndex:
         self.g_rest = np.concatenate(g_rest)
 
 
-_INDEX_CACHE: Dict[Any, FlatIndex] = {}
+_INDEX_CACHE: "OrderedDict[Any, FlatIndex]" = OrderedDict()
+_INDEX_CACHE_MAX = 64
 
 
 def get_index(params: Params) -> FlatIndex:
-    """Build (or fetch the cached) FlatIndex for this params structure."""
-    leaves, _ = tree_flatten_with_path(params)
-    key = tuple((str(path), tuple(x.shape), jnp.result_type(x).name)
-                for path, x in leaves)
+    """Build (or fetch the cached) FlatIndex for this params structure.
+
+    Keyed on the treedef *and* the leaf (shape, dtype) layout: two pytrees
+    with different container structure can share the same flatten order (e.g.
+    a tuple vs a list at the same path), and unflatten must restore the right
+    one.  LRU-bounded so long-lived processes over many model configs don't
+    grow the cache without limit.
+    """
+    leaves, treedef = tree_flatten_with_path(params)
+    key = (treedef,
+           tuple((tuple(x.shape), jnp.result_type(x).name) for _, x in leaves))
     idx = _INDEX_CACHE.get(key)
     if idx is None:
         idx = _INDEX_CACHE[key] = FlatIndex(params)
+        while len(_INDEX_CACHE) > _INDEX_CACHE_MAX:
+            _INDEX_CACHE.popitem(last=False)
+    else:
+        _INDEX_CACHE.move_to_end(key)
     return idx
 
 
@@ -210,21 +223,21 @@ def _rows_trimmed_sq(rows: jax.Array, t: jax.Array, use_kernel: bool,
                    axis=-1)
 
 
-def aggregate_flat(global_params: Params, stacked_params: Params,
-                   cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
-                   gmaps: jax.Array, n_data: jax.Array, *, graft: bool = True,
-                   scale: bool = True, trim: float = 0.95, eps: float = 1e-12,
-                   use_kernel: Optional[bool] = None,
-                   interpret: bool = False) -> Params:
-    """Alg. 1 on the flat cohort buffer; numerically matches the tree engine
-    (``fedfa.aggregate``) within float tolerance for every strategy preset."""
+def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
+                      cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
+                      gmaps: jax.Array, n_data: jax.Array, *,
+                      graft: bool = True, scale: bool = True,
+                      trim: float = 0.95, eps: float = 1e-12,
+                      use_kernel: Optional[bool] = None,
+                      interpret: bool = False) -> jax.Array:
+    """Alg. 1 entirely in flat space: (N,) global + (m, N) cohort buffers in,
+    (N,) new global out — no pytree packing/unpacking, so the resident
+    multi-round driver (``repro.core.round``) can keep both buffers donated
+    across rounds.  ``aggregate_flat`` below is the tree-in/tree-out wrapper."""
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
-    index = get_index(global_params)
     m = n_data.shape[0]
 
-    g_flat = flatten(index, global_params)                          # (N,)
-    x = flatten_stacked(index, stacked_params)                      # (m, N)
     dens, fracs = jax.vmap(
         functools.partial(_density_and_fraction, cfg, index))(masks)
     x_g = jax.vmap(functools.partial(_graft_flat, index))(x, gmaps) \
@@ -270,5 +283,22 @@ def aggregate_flat(global_params: Params, stacked_params: Params,
                             use_kernel=use_kernel, interpret=interpret)
 
     upd = Mp / jnp.maximum(Gm, eps)
-    out = jnp.where(Gm > 0, upd, g_flat)   # γ = 0 keeps the global value
+    return jnp.where(Gm > 0, upd, g_flat)  # γ = 0 keeps the global value
+
+
+def aggregate_flat(global_params: Params, stacked_params: Params,
+                   cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
+                   gmaps: jax.Array, n_data: jax.Array, *, graft: bool = True,
+                   scale: bool = True, trim: float = 0.95, eps: float = 1e-12,
+                   use_kernel: Optional[bool] = None,
+                   interpret: bool = False) -> Params:
+    """Alg. 1 on the flat cohort buffer; numerically matches the tree engine
+    (``fedfa.aggregate``) within float tolerance for every strategy preset."""
+    index = get_index(global_params)
+    g_flat = flatten(index, global_params)                          # (N,)
+    x = flatten_stacked(index, stacked_params)                      # (m, N)
+    out = aggregate_buffers(index, g_flat, x, cfg, masks, gates, gmaps,
+                            n_data, graft=graft, scale=scale, trim=trim,
+                            eps=eps, use_kernel=use_kernel,
+                            interpret=interpret)
     return unflatten(index, out)

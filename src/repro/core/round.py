@@ -1,0 +1,171 @@
+"""Resident-buffer multi-round FL driver (Alg. 1, lines 4-25, over rounds).
+
+PR 1 made a single aggregation call fast; this module removes the per-round
+host overhead around it.  The whole round — vmapped local training
+(``server.cohort_update``), grafting, trimmed norms and the (M', γ)
+accumulation (``flat.aggregate_buffers``) — is ONE jitted program over the
+resident ``(N,)`` f32 global buffer and an ``(m, N)`` f32 cohort buffer:
+
+  * clients unpack the global model with ``flat.unflatten`` *inside* the
+    trace (a slice + reshape + cast per leaf, fused by XLA),
+  * the server side never leaves flat space,
+  * both buffers are donated (``donate_argnums=(0, 1)`` with
+    ``keep_unused=True`` so the scratch cohort buffer stays a parameter and
+    XLA aliases it to the new ``(m, N)`` stacked-updates output), so the two
+    allocations ping-pong across rounds instead of being re-allocated.
+
+``run_rounds`` drives R rounds, compiling the round once per cohort shape
+(m, batch shapes, attacker presence) and unflattening only at ``eval_every``
+boundaries for eval/checkpoint.  This is the layering the next PR shards:
+the ``(m, N)`` client axis maps onto the mesh ``data`` axis without
+re-plumbing the driver.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import flat
+from repro.core.fedfa import STRATEGIES
+from repro.core.server import (ClientSpec, FLConfig, cohort_update,
+                               default_class_masks, stack_runtimes)
+
+Params = Dict[str, Any]
+
+# jitted round programs, keyed on everything the trace closes over; the
+# FlatIndex participates by identity (the key keeps it alive).  Shapes and
+# the cms-is-None structure are handled by jit's own cache underneath.
+_ROUND_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
+_ROUND_CACHE_MAX = 16
+
+
+def _fl_static(fl: FLConfig) -> Tuple:
+    """The FLConfig fields the round trace closes over (FLConfig is mutable,
+    so the compiled-program cache keys on a value snapshot)."""
+    return (fl.strategy, fl.lr, fl.task, fl.trim, fl.attack_lambda,
+            fl.use_kernel, fl.interpret)
+
+
+def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
+                    *, any_malicious: bool, donate: bool = True):
+    """Build (or fetch) the jitted resident round program.
+
+    Signature of the returned function:
+      (g_buf (N,), c_buf (m, N) scratch, masks, gates, gmaps, nd, cms, mal,
+       batches, key) -> (g_buf' (N,), x (m, N) stacked updates, mean loss)
+
+    g_buf and c_buf are donated; the new cohort buffer x reuses c_buf's
+    allocation and is what the caller donates back next round.
+    """
+    key = (index, cfg, _fl_static(fl), bool(any_malicious), bool(donate))
+    fn = _ROUND_CACHE.get(key)
+    if fn is not None:
+        _ROUND_CACHE.move_to_end(key)
+        return fn
+    kw = STRATEGIES[fl.strategy]
+
+    def _round(g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches, k):
+        m = nd.shape[0]
+        g = flat.unflatten(index, g_buf)           # leaf dtypes, inside trace
+        keys = jax.random.split(k, m)
+        updated, losses = cohort_update(
+            g, cfg, fl, masks, gates, batches, cms, mal, keys,
+            any_malicious=any_malicious)
+        x = flat.flatten_stacked(index, updated)                    # (m, N)
+        g_new = flat.aggregate_buffers(
+            index, g_buf, x, cfg, masks, gates, gmaps, nd, trim=fl.trim,
+            use_kernel=fl.use_kernel, interpret=fl.interpret, **kw)
+        return g_new, x, jnp.mean(losses)
+
+    fn = jax.jit(_round, donate_argnums=(0, 1) if donate else (),
+                 keep_unused=donate)
+    _ROUND_CACHE[key] = fn
+    while len(_ROUND_CACHE) > _ROUND_CACHE_MAX:
+        _ROUND_CACHE.popitem(last=False)
+    return fn
+
+
+def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
+               fl: FLConfig, index: flat.FlatIndex, runtimes, batches, key,
+               *, any_malicious: bool = False
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One resident round: ``flat_round(g_buf, ...) -> (g_buf', c_buf', loss)``.
+
+    runtimes: the ``server.stack_runtimes`` tuple for the selected cohort.
+    c_buf may be None (first round of a cohort shape) — a fresh (m, N)
+    scratch buffer is allocated; afterwards pass the returned cohort buffer
+    back in so its allocation is reused.
+    """
+    masks, gates, gmaps, nd, cms, mal = runtimes
+    m = int(nd.shape[0])
+    if c_buf is None or c_buf.is_deleted():
+        c_buf = jnp.zeros((m, index.n), jnp.float32)
+    cms_in = default_class_masks(cms, cfg, fl, m)
+    fn = make_flat_round(cfg, fl, index, any_malicious=any_malicious)
+    return fn(g_buf, c_buf, masks, gates, gmaps, nd, cms_in, mal, batches,
+              key)
+
+
+class ResidentDriver:
+    """Multi-round driver state: the FlatIndex, per-m scratch cohort buffers,
+    and the donated round programs (via the module cache)."""
+
+    def __init__(self, cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex):
+        self.cfg, self.fl, self.index = cfg, fl, index
+        self._cbufs: Dict[int, jax.Array] = {}
+
+    def round(self, g_buf: jax.Array, specs: Sequence[ClientSpec], batches,
+              key) -> Tuple[jax.Array, jax.Array]:
+        """Run one round on the resident buffer: (g_buf', mean loss)."""
+        runtimes = stack_runtimes(self.cfg, specs)
+        m = len(specs)
+        g_buf, c_buf, loss = flat_round(
+            g_buf, self._cbufs.get(m), self.cfg, self.fl, self.index,
+            runtimes, batches, key,
+            any_malicious=any(s.malicious for s in specs))
+        self._cbufs[m] = c_buf
+        return g_buf, loss
+
+
+def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
+               rounds: int, data_fn: Callable[[int], Tuple[Sequence[ClientSpec], Any]],
+               key, *, eval_every: int = 5,
+               eval_fn: Optional[Callable[[int, float, Params], None]] = None,
+               ckpt_path: Optional[str] = None
+               ) -> Tuple[Params, List[float]]:
+    """Drive R resident rounds; unflatten only at eval/checkpoint boundaries.
+
+    data_fn(r) -> (selected ClientSpecs, stacked client batches) — called
+    host-side once per round, exactly like the per-round loop, so client
+    selection and batching match ``launch.train.run_fl`` round for round.
+    The per-round key is ``jax.random.fold_in(key, r)`` (same as the
+    per-round path, so the two drivers are loss-parity comparable).
+
+    eval_fn(r, mean_loss, params_tree) runs at ``eval_every`` boundaries and
+    on the final round (``eval_every <= 0``: final round only); with
+    ckpt_path set, a checkpoint is written from the resident buffer at the
+    same boundaries (``checkpoint.save_from_buffer``).
+    Returns (final params tree, per-round mean losses).
+    """
+    index = flat.get_index(global_params)
+    driver = ResidentDriver(cfg, fl, index)
+    g_buf = flat.flatten(index, global_params)
+    losses: List[jax.Array] = []
+    for r in range(rounds):
+        specs, batches = data_fn(r)
+        g_buf, loss = driver.round(g_buf, specs, batches,
+                                   jax.random.fold_in(key, r))
+        losses.append(loss)
+        if (eval_every > 0 and r % eval_every == 0) or r == rounds - 1:
+            if eval_fn is not None:
+                eval_fn(r, float(loss), flat.unflatten(index, g_buf))
+            if ckpt_path is not None:
+                from repro.checkpoint import checkpoint as ckpt_mod
+                ckpt_mod.save_from_buffer(
+                    f"{ckpt_path}_r{r:05d}", index, g_buf,
+                    meta={"round": r, "strategy": fl.strategy})
+    return flat.unflatten(index, g_buf), [float(l) for l in losses]

@@ -8,6 +8,7 @@ mesh's ``data`` axis (see repro.launch.train).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -43,6 +44,8 @@ class FLConfig:
     task: str = "lm"
     trim: float = 0.95
     agg_engine: str = "flat"            # "flat" (fused buffer) | "tree"
+    use_kernel: Optional[bool] = None   # flat engine: Pallas kernels (None=auto)
+    interpret: bool = False             # flat engine: interpret-mode kernels
     seed: int = 0
 
 
@@ -66,17 +69,31 @@ def stack_runtimes(cfg: ArchConfig, specs: Sequence[ClientSpec]):
     return masks, gates, gmaps, nd, cms, mal
 
 
-def fl_round(global_params: Params, cfg: ArchConfig, fl: FLConfig,
-             specs: Sequence[ClientSpec], client_batches, key,
-             *, any_malicious: Optional[bool] = None) -> Tuple[Params, jax.Array]:
-    """One synchronized round over the given (already selected) clients.
+@functools.lru_cache(maxsize=8)
+def _ones_class_masks(m: int, vocab: int) -> jax.Array:
+    # constant across rounds — cached so the resident round path doesn't
+    # re-allocate an (m, V) device array every round
+    return jnp.ones((m, vocab), jnp.float32)
 
-    client_batches: pytree with leading axes (m, E, B, ...) — per-client
-    local datasets for E local steps.  Returns (new_global, mean local loss).
-    """
-    masks, gates, gmaps, nd, cms, mal = stack_runtimes(cfg, specs)
-    if any_malicious is None:
-        any_malicious = any(s.malicious for s in specs)
+
+def default_class_masks(cms: Optional[jax.Array], cfg: ArchConfig,
+                        fl: FLConfig, m: int) -> Optional[jax.Array]:
+    """Stacked class masks for vmapped training: all-ones on the cls task when
+    no client restricts its classes, None on tasks without class masking."""
+    if cms is not None:
+        return cms
+    return _ones_class_masks(m, cfg.padded_vocab) if fl.task == "cls" else None
+
+
+def cohort_update(global_params: Params, cfg: ArchConfig, fl: FLConfig,
+                  masks: WidthMasks, gates: jax.Array, client_batches,
+                  cms: Optional[jax.Array], mal: jax.Array, keys: jax.Array,
+                  *, any_malicious: bool) -> Tuple[Params, jax.Array]:
+    """Vmapped local training over the stacked cohort (Alg. 1 lines 7-10),
+    including the malicious label-shuffle branch when the cohort has
+    attackers.  Shared by the per-round path (``fl_round``) and the resident
+    flat driver (``repro.core.round``).  Returns (stacked updated params with
+    leading client axis m, (m,) mean local losses)."""
 
     def train_one(mk, gt, batches, cm, mal_flag, k):
         honest, losses = local_update(
@@ -97,22 +114,62 @@ def fl_round(global_params: Params, cfg: ArchConfig, fl: FLConfig,
             out = honest
         return out, jnp.mean(losses)
 
-    m = nd.shape[0]
-    keys = jax.random.split(key, m)
-    cms_in = cms if cms is not None else jnp.ones((m, cfg.padded_vocab), jnp.float32) \
-        if fl.task == "cls" else None
-    if cms_in is None:
-        updated, losses = jax.vmap(
+    if cms is None:
+        return jax.vmap(
             lambda mk, gt, b, fl_, k: train_one(mk, gt, b, None, fl_, k)
         )(masks, gates, client_batches, mal, keys)
-    else:
-        updated, losses = jax.vmap(train_one)(
-            masks, gates, client_batches, cms_in, mal, keys)
+    return jax.vmap(train_one)(masks, gates, client_batches, cms, mal, keys)
+
+
+def fl_round(global_params: Params, cfg: ArchConfig, fl: FLConfig,
+             specs: Sequence[ClientSpec], client_batches, key,
+             *, any_malicious: Optional[bool] = None) -> Tuple[Params, jax.Array]:
+    """One synchronized round over the given (already selected) clients.
+
+    client_batches: pytree with leading axes (m, E, B, ...) — per-client
+    local datasets for E local steps.  Returns (new_global, mean local loss).
+    """
+    masks, gates, gmaps, nd, cms, mal = stack_runtimes(cfg, specs)
+    if any_malicious is None:
+        any_malicious = any(s.malicious for s in specs)
+
+    m = nd.shape[0]
+    keys = jax.random.split(key, m)
+    cms_in = default_class_masks(cms, cfg, fl, m)
+    updated, losses = cohort_update(
+        global_params, cfg, fl, masks, gates, client_batches, cms_in, mal,
+        keys, any_malicious=any_malicious)
 
     new_global = fedfa.aggregate_strategy(
         fl.strategy, global_params, updated, cfg, masks, gates, gmaps, nd,
-        trim=fl.trim, engine=fl.agg_engine)
+        trim=fl.trim, engine=fl.agg_engine, use_kernel=fl.use_kernel,
+        interpret=fl.interpret)
     return new_global, jnp.mean(losses)
+
+
+def fl_round_flat(g_buf: jax.Array, cfg: ArchConfig, fl: FLConfig,
+                  specs: Sequence[ClientSpec], client_batches, key,
+                  *, index=None, c_buf: Optional[jax.Array] = None,
+                  any_malicious: Optional[bool] = None):
+    """Flat-native counterpart of ``fl_round``: one round on the resident
+    (N,) global buffer, sharing ``stack_runtimes`` with the per-round path.
+
+    Dispatches to the donated, jitted round program in ``repro.core.round``
+    (compiled once per cohort shape).  Returns (new g_buf, new (m, N) cohort
+    buffer to donate back next round, mean local loss).  For multi-round
+    training prefer ``repro.core.round.run_rounds``, which also manages the
+    scratch cohort buffers.
+    """
+    from repro.core import round as round_mod
+    if index is None:
+        raise ValueError("fl_round_flat needs the FlatIndex the resident "
+                         "buffer was flattened with (flat.get_index(params))")
+    runtimes = stack_runtimes(cfg, specs)
+    if any_malicious is None:
+        any_malicious = any(s.malicious for s in specs)
+    return round_mod.flat_round(g_buf, c_buf, cfg, fl, index, runtimes,
+                                client_batches, key,
+                                any_malicious=any_malicious)
 
 
 # ---------------------------------------------------------------------------

@@ -89,6 +89,8 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
            eval_every: int = 5, task: str = "cls",
            width_mults=(0.25, 0.5, 0.75, 1.0),
            arch_mode: str = "width", agg_engine: str = "flat",
+           driver: str = "resident", use_kernel: Optional[bool] = None,
+           interpret: bool = False, ckpt: Optional[str] = None,
            quiet: bool = False) -> dict:
     import jax
     import jax.numpy as jnp
@@ -121,7 +123,8 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
     profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size, seed=seed)
     fl = FLConfig(participation=participation, local_steps=local_steps,
                   lr=lr, attack_lambda=attack_lambda, strategy=strategy,
-                  task=task, agg_engine=agg_engine, seed=seed)
+                  task=task, agg_engine=agg_engine, use_kernel=use_kernel,
+                  interpret=interpret, seed=seed)
 
     hist = {"round": [], "loss": [], "global_acc": [], "local_acc": []}
     test = pipeline.eval_batch_cls(n_classes, cfg.vocab_size, 256, seq_len,
@@ -162,28 +165,51 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
                 (jnp.argmax(lg, -1) == d["labels"]).astype(jnp.float32))))
         return float(np.mean(accs))
 
-    hist["local_acc"] = []
-    for r in range(rounds):
+    def round_data(r):
+        """Host-side per-round cohort selection + batch synthesis (shared by
+        both drivers so they see identical rounds)."""
         sel = select_clients(n_clients, participation, rng)
-        sel_specs = [specs[i] for i in sel]
         batches_np = pipeline.round_batches_cls(
             parts, sel, n_classes, cfg.vocab_size, local_steps=local_steps,
             batch=batch, seq_len=seq_len, profiles=profiles,
             seed=seed * 1000 + r)
-        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
-        params, loss = fl_round(params, cfg, fl, sel_specs, batches,
-                                jax.random.fold_in(key, r))
-        if r % eval_every == 0 or r == rounds - 1:
-            acc = float(global_acc(params))
-            lacc = local_acc(params)
-            hist["round"].append(r)
-            hist["loss"].append(float(loss))
-            hist["global_acc"].append(acc)
-            hist["local_acc"].append(lacc)
-            if not quiet:
-                print(f"[{strategy}/{arch_mode}] round {r:3d} "
-                      f"loss {float(loss):.4f} global_acc {acc:.3f} "
-                      f"local_acc {lacc:.3f}", flush=True)
+        return ([specs[i] for i in sel],
+                {k: jnp.asarray(v) for k, v in batches_np.items()})
+
+    def record_eval(r, loss, p):
+        acc = float(global_acc(p))
+        lacc = local_acc(p)
+        hist["round"].append(r)
+        hist["loss"].append(loss)
+        hist["global_acc"].append(acc)
+        hist["local_acc"].append(lacc)
+        if not quiet:
+            print(f"[{strategy}/{arch_mode}] round {r:3d} "
+                  f"loss {loss:.4f} global_acc {acc:.3f} "
+                  f"local_acc {lacc:.3f}", flush=True)
+
+    if driver == "resident" and agg_engine != "flat":
+        if not quiet:
+            print("resident driver is flat-native; falling back to the "
+                  "per-round driver for agg_engine=tree", flush=True)
+        driver = "per-round"
+
+    if driver == "resident":
+        from repro.core.round import run_rounds
+        params, _ = run_rounds(params, cfg, fl, rounds, round_data, key,
+                               eval_every=eval_every, eval_fn=record_eval,
+                               ckpt_path=ckpt)
+    else:
+        from repro.checkpoint import checkpoint as ckpt_mod
+        for r in range(rounds):
+            sel_specs, batches = round_data(r)
+            params, loss = fl_round(params, cfg, fl, sel_specs, batches,
+                                    jax.random.fold_in(key, r))
+            if (eval_every > 0 and r % eval_every == 0) or r == rounds - 1:
+                record_eval(r, float(loss), params)
+                if ckpt is not None:
+                    ckpt_mod.save(f"{ckpt}_r{r:05d}", params,
+                                  meta={"round": r, "strategy": strategy})
     hist["final_acc"] = hist["global_acc"][-1]
     hist["final_local_acc"] = hist["local_acc"][-1]
     return hist
@@ -202,7 +228,29 @@ def main() -> None:
     ap.add_argument("--noniid", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--participation", type=float, default=0.5,
+                    help="fraction C of clients selected per round")
+    ap.add_argument("--local-steps", type=int, default=2,
+                    help="E local SGD steps per round")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--arch-mode", choices=["width", "depth", "both"],
+                    default="width",
+                    help="client flexibility regime (paper §5.1)")
+    ap.add_argument("--task", choices=["cls", "lm"], default="cls")
+    ap.add_argument("--eval-every", type=int, default=5,
+                    help="<=0: evaluate on the final round only")
     ap.add_argument("--agg-engine", choices=["flat", "tree"], default="flat")
+    ap.add_argument("--driver", choices=["resident", "per-round"],
+                    default="resident",
+                    help="resident: one jitted round program with donated "
+                         "(N,)/(m,N) buffers; per-round: re-dispatch each round")
+    ap.add_argument("--use-kernel", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="flat engine: Pallas kernel dispatch (auto=TPU only)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="flat engine: run Pallas kernels in interpret mode")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint path prefix (written at eval boundaries)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mode == "dense":
@@ -213,7 +261,14 @@ def main() -> None:
                      malicious_frac=args.malicious_frac,
                      attack_lambda=args.attack_lambda, noniid=args.noniid,
                      batch=args.batch, seq_len=args.seq_len,
-                     agg_engine=args.agg_engine)
+                     participation=args.participation,
+                     local_steps=args.local_steps, lr=args.lr,
+                     arch_mode=args.arch_mode, task=args.task,
+                     eval_every=args.eval_every,
+                     agg_engine=args.agg_engine, driver=args.driver,
+                     use_kernel={"auto": None, "on": True,
+                                 "off": False}[args.use_kernel],
+                     interpret=args.interpret, ckpt=args.ckpt)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=1)

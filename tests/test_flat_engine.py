@@ -161,6 +161,69 @@ def test_flat_engine_interpret_mode_matches_tree():
     _assert_tree_allclose(out_tree, out_flat)
 
 
+def _random_mixed_tree(rng: np.random.Generator, depth=0):
+    """Random nested dict/tuple/list pytree with mixed bf16/f32 leaves."""
+    def leaf():
+        shape = tuple(int(rng.integers(1, 5))
+                      for _ in range(int(rng.integers(0, 3))))
+        dtype = jnp.bfloat16 if rng.random() < 0.5 else jnp.float32
+        return jnp.asarray(rng.standard_normal(shape), jnp.float32) \
+            .astype(dtype)
+    if depth >= 2:
+        return leaf()
+    kids = [_random_mixed_tree(rng, depth + 1)
+            for _ in range(int(rng.integers(1, 4)))]
+    kind = rng.integers(3)
+    if kind == 0:
+        return {f"k{i}": c for i, c in enumerate(kids)}
+    return tuple(kids) if kind == 1 else list(kids)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_roundtrip_mixed_dtypes_property(seed):
+    """Property: flatten -> unflatten over arbitrary mixed-dtype pytrees is
+    the identity — exact dtype restoration (bf16 embeds losslessly in the f32
+    buffer) and exact structure."""
+    tree = _random_mixed_tree(np.random.default_rng(seed))
+    index = flat.get_index(tree)
+    back = flat.unflatten(index, flat.flatten(index, tree))
+    assert jax.tree_util.tree_structure(back) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert b.dtype == a.dtype and b.shape == a.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_index_cache_distinguishes_treedefs():
+    """Two pytrees with identical (path, shape, dtype) flatten order but
+    different structure (tuple vs list share SequenceKey paths) must get
+    distinct FlatIndexes — the old cache key collided here and unflatten
+    returned the wrong container type."""
+    x = jnp.ones((3,), jnp.float32)
+    idx_tuple = flat.get_index({"a": (x,)})
+    idx_list = flat.get_index({"a": [x]})
+    assert idx_tuple is not idx_list
+    assert idx_tuple.treedef != idx_list.treedef
+    back = flat.unflatten(idx_list, flat.flatten(idx_list, {"a": [x]}))
+    assert isinstance(back["a"], list)
+    back_t = flat.unflatten(idx_tuple, flat.flatten(idx_tuple, {"a": (x,)}))
+    assert isinstance(back_t["a"], tuple)
+
+
+def test_index_cache_bounded():
+    """The index cache is LRU-bounded instead of growing without limit."""
+    for i in range(flat._INDEX_CACHE_MAX + 8):
+        flat.get_index({f"leaf{i}": jnp.zeros((i + 1,), jnp.float32)})
+    assert len(flat._INDEX_CACHE) <= flat._INDEX_CACHE_MAX
+    # most-recent entries survive (LRU evicts from the front)
+    i = flat._INDEX_CACHE_MAX + 7
+    probe = {f"leaf{i}": jnp.zeros((i + 1,), jnp.float32)}
+    before = len(flat._INDEX_CACHE)
+    flat.get_index(probe)
+    assert len(flat._INDEX_CACHE) == before
+
+
 def test_single_client_cohort():
     """m=1: mean norm equals the client's own norm, α=1, aggregate returns
     the (masked, grafted) client update where γ>0."""
