@@ -1,12 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check bench-round bench-aggregate
+.PHONY: tier1 check bench-round bench-aggregate bench-shard
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
 
-check:            ## tier-1 tests + resident-round smoke bench (CI gate)
+check:            ## tier-1 tests + resident/sharded round smoke benches (CI gate)
 	$(PY) benchmarks/run.py --check
 
 bench-round:      ## resident vs per-round driver, m in {4,16,64} -> BENCH_round.json
@@ -14,3 +14,7 @@ bench-round:      ## resident vs per-round driver, m in {4,16,64} -> BENCH_round
 
 bench-aggregate:  ## flat vs tree aggregation engines -> BENCH_aggregate.json
 	$(PY) benchmarks/bench_aggregate.py
+
+bench-shard:      ## sharded vs unsharded resident round on 4 forced CPU devices -> BENCH_shard.json
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+		$(PY) benchmarks/bench_shard.py

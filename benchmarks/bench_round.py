@@ -66,14 +66,14 @@ def _time_per_round(cfg, fl, params, specs, batches, rounds):
     return time.perf_counter() - t0
 
 
-def _time_resident(cfg, fl, params, specs, batches, rounds):
+def _time_resident(cfg, fl, params, specs, batches, rounds, mesh=None):
     import jax
     from repro.core import flat
     from repro.core.round import ResidentDriver
 
     key = jax.random.PRNGKey(1)
     index = flat.get_index(params)
-    driver = ResidentDriver(cfg, fl, index)
+    driver = ResidentDriver(cfg, fl, index, mesh=mesh)
     g_buf = flat.flatten(index, params)
     g_buf, _ = driver.round(g_buf, specs, batches,
                             jax.random.fold_in(key, 0))  # compile + warm
@@ -99,10 +99,16 @@ def main() -> None:
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="exit 1 if resident/per-round rounds/sec falls "
                          "below this for any cohort size")
-    ap.add_argument("--out", default="BENCH_round.json")
+    ap.add_argument("--out", default=None,
+                    help="output json (default: BENCH_round.json, or "
+                         "results/BENCH_round_smoke.json with --smoke so CI "
+                         "smoke runs don't clobber the checked-in anchor)")
     args = ap.parse_args()
     if args.smoke:
         args.cohorts, args.rounds = [4], 3
+    if args.out is None:
+        args.out = "results/BENCH_round_smoke.json" if args.smoke \
+            else "BENCH_round.json"
 
     import jax
 
@@ -137,6 +143,7 @@ def main() -> None:
     out = args.out if os.path.isabs(args.out) else os.path.normpath(
         os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                      args.out))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"wrote {out}")

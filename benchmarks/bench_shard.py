@@ -1,0 +1,194 @@
+"""Sharded resident-round benchmark: cohort axis over the mesh ``data`` axis.
+
+Times the resident driver (``repro.core.round``) with and without a mesh
+(``repro.launch.mesh.make_data_mesh`` — every local device on the data
+axis) and inspects the lowered HLO of the sharded round program:
+
+  * on a single-device host the mesh degenerates to 1x1 and the sharded
+    program must not regress against the unsharded resident round,
+  * on a multi-device backend (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=K`` on CPU — the CI configuration — or a real TPU slice)
+    the collective counts make the sharding inspectable: the (M', γ)
+    accumulation must lower to per-shard partial sums + one all-reduce per
+    fused reduction, with NO all-gather materializing the (m, N) cohort.
+
+Emits ``BENCH_shard.json`` — the sharding trajectory anchor.
+
+  PYTHONPATH=src python benchmarks/bench_shard.py [--smoke] [--min-ratio X]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from collections import Counter
+
+try:
+    from benchmarks.bench_round import _setup, _time_resident
+except ImportError:                      # run as a script from benchmarks/
+    from bench_round import _setup, _time_resident
+
+
+def _collectives(cfg, fl, params, specs, batches, mesh):
+    """Lower + compile the sharded round program and count its collectives.
+
+    Returns (counts, full_cohort_gathers, psum_reduces): ``counts`` is a
+    dict of collective-op line counts, ``full_cohort_gathers`` the number of
+    all-gathers whose result is the full (m, N) cohort (must be 0), and
+    ``psum_reduces`` the number of all-reduces of exactly N elements — the
+    fused (M', γ) partial-sum reductions.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.core.round import make_flat_round
+    from repro.core.server import default_class_masks, stack_runtimes
+    from repro.sharding import cohort as csh
+
+    index = flat.get_index(params)
+    runtimes = stack_runtimes(cfg, specs)
+    m = len(specs)
+    pad = csh.pad_rows(m, mesh)
+    m_real = m if pad else None
+    (masks, gates, gmaps, nd, cms, mal), bpad = csh.pad_cohort(
+        runtimes, batches, pad)
+    mp = m + pad
+    cms_in = default_class_masks(cms, cfg, fl, mp)
+    fn = make_flat_round(cfg, fl, index, any_malicious=False, mesh=mesh,
+                         m_real=m_real)
+    g = jax.device_put(flat.flatten(index, params), csh.replicated(mesh))
+    c = jax.device_put(jnp.zeros((mp, index.n), jnp.float32),
+                       csh.cohort_sharding(mesh))
+    txt = fn.lower(g, c, masks, gates, gmaps, nd, cms_in, mal, bpad,
+                   jax.random.PRNGKey(0)).compile().as_text()
+
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    counts = Counter()
+    full_gathers = psums = 0
+    shape_re = re.compile(r'=\s*\(?([a-z0-9]+)\[([\d,]*)\]')
+    for line in txt.splitlines():
+        for kind in kinds:
+            # sync ops lower as " all-reduce(...)"; TPU/GPU backends often
+            # emit async pairs — count the "-start(" half (which carries the
+            # shape), never the "-done(" half, so each op counts once
+            if f" {kind}(" not in line and f" {kind}-start(" not in line:
+                continue
+            counts[kind] += 1
+            sm = shape_re.search(line)
+            if sm is None:
+                continue
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            elems = 1
+            for d in dims:
+                elems *= d
+            if kind == "all-gather" and elems >= mp * index.n:
+                full_gathers += 1
+            if kind == "all-reduce" and elems == index.n:
+                psums += 1
+    return dict(counts), full_gathers, psums
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cohorts", nargs="+", type=int, default=[4, 16])
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="m=4 only, 3 rounds — the tier-1 CI configuration")
+    ap.add_argument("--min-ratio", type=float, default=None,
+                    help="exit 1 if sharded/unsharded rounds-per-sec falls "
+                         "below this (default: 0.75 on a single device, "
+                         "structural checks only on multi-device)")
+    ap.add_argument("--out", default=None,
+                    help="output json (default: BENCH_shard.json, or "
+                         "results/BENCH_shard_smoke.json with --smoke so CI "
+                         "smoke runs don't clobber the checked-in anchor)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.cohorts, args.rounds = [4], 3
+    if args.out is None:
+        args.out = "results/BENCH_shard_smoke.json" if args.smoke \
+            else "BENCH_shard.json"
+
+    import jax
+    from repro.launch.mesh import make_data_mesh
+
+    n_dev = jax.device_count()
+    mesh = make_data_mesh()
+    min_ratio = args.min_ratio
+    if min_ratio is None and n_dev == 1:
+        # 1x1 mesh: sharding annotations must be ~free on the host path
+        min_ratio = 0.75
+
+    results = {"backend": jax.default_backend(), "n_devices": n_dev,
+               "mesh": {ax: int(s) for ax, s in mesh.shape.items()},
+               "config": {"rounds": args.rounds,
+                          "local_steps": args.local_steps,
+                          "batch": args.batch, "seq_len": args.seq_len},
+               "runs": {}}
+    ok = True
+    for m in args.cohorts:
+        cfg, fl, params, specs, batches = _setup(
+            m, args.local_steps, args.batch, args.seq_len)
+        dt_un = _time_resident(cfg, fl, params, specs, batches, args.rounds,
+                               mesh=None)
+        dt_sh = _time_resident(cfg, fl, params, specs, batches, args.rounds,
+                               mesh=mesh)
+        counts, full_gathers, psums = _collectives(
+            cfg, fl, params, specs, batches, mesh)
+        ratio = dt_un / max(dt_sh, 1e-9)
+        rec = {
+            "unsharded": {"mean_s": round(dt_un / args.rounds, 5),
+                          "rounds_per_s": round(args.rounds / dt_un, 3)},
+            "sharded": {"mean_s": round(dt_sh / args.rounds, 5),
+                        "rounds_per_s": round(args.rounds / dt_sh, 3)},
+            "sharded_over_unsharded": round(ratio, 3),
+            "collectives": counts,
+            "full_cohort_all_gathers": full_gathers,
+            "n_psum_reduces": psums,
+        }
+        results["runs"][f"m{m}"] = rec
+        print(f"m={m:3d}  unsharded {rec['unsharded']['rounds_per_s']:7.2f} "
+              f"r/s  sharded {rec['sharded']['rounds_per_s']:7.2f} r/s  "
+              f"ratio {ratio:.2f}x  collectives {counts}", flush=True)
+        if full_gathers:
+            print(f"FAIL: {full_gathers} all-gather(s) materialize the full "
+                  f"(m, N) cohort at m={m}", flush=True)
+            ok = False
+        if n_dev > 1 and counts.get("all-gather", 0) > 0:
+            # the round has no legitimate all-gather at all today; a nonzero
+            # count means cohort data is being re-replicated somewhere (the
+            # leaf-by-leaf top_k re-gather is each smaller than m*N, so the
+            # full-cohort check alone would miss it)
+            print(f"FAIL: {counts['all-gather']} all-gather(s) in the "
+                  f"sharded round at m={m} — cohort data is being "
+                  f"re-replicated", flush=True)
+            ok = False
+        if n_dev > 1 and psums < 1:
+            print(f"FAIL: no N-sized all-reduce in the sharded round at "
+                  f"m={m} — the (M', γ) reduction is not a per-shard "
+                  f"partial sum + psum", flush=True)
+            ok = False
+        if min_ratio is not None and ratio < min_ratio:
+            print(f"FAIL: sharded/unsharded ratio {ratio:.2f} < required "
+                  f"{min_ratio:.2f} at m={m}", flush=True)
+            ok = False
+
+    out = args.out if os.path.isabs(args.out) else os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                     args.out))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

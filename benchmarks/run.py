@@ -114,9 +114,10 @@ def bench_aggregation():
 
 
 def check() -> None:
-    """Tier-1 CI gate: the repo's fast test suite plus a smoke benchmark of
-    the resident round driver, so perf regressions on the round path fail
-    loudly alongside correctness ones.  Exits non-zero on any failure.
+    """Tier-1 CI gate: the repo's fast test suite plus smoke benchmarks of
+    the resident round driver and the sharded round path, so perf and
+    sharding regressions fail loudly alongside correctness ones.  Exits
+    non-zero on any failure.
 
         PYTHONPATH=src python benchmarks/run.py --check
     """
@@ -125,15 +126,25 @@ def check() -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # sharded smoke runs on a forced-4-device CPU backend so the cohort-axis
+    # collectives are actually in the lowering (XLA_FLAGS is read at jax
+    # init, hence a subprocess env, not a runtime switch)
+    shard_env = dict(env)
+    shard_env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                              " --xla_force_host_platform_device_count=4"
+                              ).strip()
     steps = [
-        ("tier-1 tests", [sys.executable, "-m", "pytest", "-x", "-q"]),
+        ("tier-1 tests", [sys.executable, "-m", "pytest", "-x", "-q"], env),
         ("round-path smoke bench",
          [sys.executable, os.path.join(root, "benchmarks", "bench_round.py"),
-          "--smoke", "--min-speedup", "1.5"]),
+          "--smoke", "--min-speedup", "1.5"], env),
+        ("sharded-round smoke bench (4 forced CPU devices)",
+         [sys.executable, os.path.join(root, "benchmarks", "bench_shard.py"),
+          "--smoke"], shard_env),
     ]
-    for name, cmd in steps:
+    for name, cmd, step_env in steps:
         print(f"== {name}: {' '.join(cmd)}", flush=True)
-        rc = subprocess.call(cmd, cwd=root, env=env)
+        rc = subprocess.call(cmd, cwd=root, env=step_env)
         if rc != 0:
             print(f"CHECK FAILED at {name} (exit {rc})", flush=True)
             sys.exit(rc)

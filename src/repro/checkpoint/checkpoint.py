@@ -15,7 +15,6 @@ def _pathstr(path) -> str:
 
 
 def save(path: str, tree: Any, meta: Dict[str, Any] | None = None) -> None:
-    leaves, treedef = jax.tree.flatten(tree)
     flat = tree_flatten_with_path(tree)[0]
     names = [_pathstr(p) for p, _ in flat]
     arrays = {f"a{i}": np.asarray(l) for i, (_, l) in enumerate(flat)}
@@ -55,11 +54,23 @@ def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
     data = np.load(path + ".npz")
     flat = tree_flatten_with_path(like)[0]
     names = [_pathstr(p) for p, _ in flat]
-    assert names == spec["names"], "checkpoint/tree structure mismatch"
+    # hard errors, not asserts: a mismatched restore under ``python -O``
+    # must not silently load the wrong parameters
+    if names != spec["names"]:
+        bad = next((f"{a!r} != {b!r}" for a, b in zip(names, spec["names"])
+                    if a != b),
+                   f"{len(names)} leaves in tree vs "
+                   f"{len(spec['names'])} in checkpoint")
+        raise ValueError(f"checkpoint/tree structure mismatch at {bad} "
+                         f"(restoring {path!r})")
     leaves = []
     for i, (_, l) in enumerate(flat):
         a = data[f"a{i}"]
-        assert tuple(a.shape) == tuple(np.shape(l)), f"shape mismatch at {names[i]}"
+        if tuple(a.shape) != tuple(np.shape(l)):
+            raise ValueError(
+                f"checkpoint shape mismatch at {names[i]}: checkpoint has "
+                f"{tuple(a.shape)}, tree expects {tuple(np.shape(l))} "
+                f"(restoring {path!r})")
         leaves.append(jax.numpy.asarray(a, dtype=l.dtype))
     treedef = jax.tree.structure(like)
     return jax.tree.unflatten(treedef, leaves), spec["meta"]

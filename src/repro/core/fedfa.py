@@ -85,11 +85,28 @@ def trimmed_sq_norms(params: Params, axtree: Params, trim: float = 0.95) -> Para
     return tree_map_with_path(f, params, axtree, is_leaf=_IS_AX)
 
 
-def scaling_factors(norms_stacked: Params, eps: float = 1e-12) -> Params:
+def scaling_factors(norms_stacked: Params, eps: float = 1e-12,
+                    n_data=None) -> Params:
     """α_c^(l) = mean_κ ||M95,κ^(l)|| / ||M95,c^(l)|| from stacked norms
-    (leading axis = clients)."""
+    (leading axis = clients).
+
+    With ``n_data`` given, the mean is over clients with data only —
+    zero-weight rows (γ = 0 in the accumulation, e.g. the sharded round's
+    pad rows) must not shift everyone else's α.  Matches the flat engine's
+    validity-weighted mean; identical to the plain mean when every client
+    has data."""
+    if n_data is None:
+        valid = None
+    else:
+        valid = (n_data > 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(valid), 1.0)
+
     def f(n):
-        mean = jnp.mean(n, axis=0, keepdims=True)
+        if valid is None:
+            mean = jnp.mean(n, axis=0, keepdims=True)
+        else:
+            w = valid.reshape((-1,) + (1,) * (n.ndim - 1))
+            mean = jnp.sum(w * n, axis=0, keepdims=True) / denom
         return mean / jnp.maximum(n, eps)
     return jax.tree.map(f, norms_stacked)
 
@@ -171,7 +188,7 @@ def aggregate(global_params: Params, stacked_params: Params, cfg: ArchConfig,
             p = apply_mask_tree(p, ax)
             return _, trimmed_sq_norms(p, ax, trim)
         _, norms = jax.lax.scan(norm_body, None, (stacked_params, masks, gmaps))
-        alphas = scaling_factors(norms, eps)
+        alphas = scaling_factors(norms, eps, n_data=n_data)
 
     def acc_body(carry, xs):
         Mp, Gm = carry

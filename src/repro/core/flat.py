@@ -223,25 +223,73 @@ def _rows_trimmed_sq(rows: jax.Array, t: jax.Array, use_kernel: bool,
                    axis=-1)
 
 
+def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
+                  trim: float, use_kernel: bool, interpret: bool,
+                  mesh=None) -> jax.Array:
+    """Per-(client, segment) trimmed norms: (m, N) masked updates +
+    (m, n_leaves) active fractions -> (m, S).
+
+    Every op here — per-leaf slicing along N, |.|, the top-k row quantile,
+    the trimmed sum of squares — is independent per client, so under a mesh
+    the whole pass runs inside ``shard_map`` on each device's client shard.
+    Left to sharding propagation, XLA's top_k partitioning instead
+    all-gathers the client axis leaf by leaf, which re-materializes the
+    cohort buffer on every device.
+    """
+
+    def norms_local(xm_l, fracs_l):
+        m_l = xm_l.shape[0]
+        cols = []
+        for li, spec in enumerate(index.leaves):
+            rows = jnp.abs(xm_l[:, spec.offset:spec.offset + spec.size]
+                           .reshape(m_l, spec.lead, spec.rest))
+            # shifted quantile: the trim-quantile of active magnitudes equals
+            # the 1-(1-trim)·f quantile of the zero-padded row
+            q = 1.0 - (1.0 - trim) * fracs_l[:, li]
+            t = _row_quantile(rows, q, trim)
+            cols.append(jnp.sqrt(
+                _rows_trimmed_sq(rows, t, use_kernel, interpret)))
+        return jnp.concatenate(cols, axis=1)
+
+    from repro.sharding.cohort import shardable
+    if not shardable(mesh, xm.shape[0]):
+        return norms_local(xm, fracs)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return shard_map(norms_local, mesh=mesh,
+                     in_specs=(P("data", None), P("data", None)),
+                     out_specs=P("data", None), check_rep=False)(xm, fracs)
+
+
 def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
                       cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
                       gmaps: jax.Array, n_data: jax.Array, *,
                       graft: bool = True, scale: bool = True,
                       trim: float = 0.95, eps: float = 1e-12,
                       use_kernel: Optional[bool] = None,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False, mesh=None) -> jax.Array:
     """Alg. 1 entirely in flat space: (N,) global + (m, N) cohort buffers in,
     (N,) new global out — no pytree packing/unpacking, so the resident
     multi-round driver (``repro.core.round``) can keep both buffers donated
-    across rounds.  ``aggregate_flat`` below is the tree-in/tree-out wrapper."""
+    across rounds.  ``aggregate_flat`` below is the tree-in/tree-out wrapper.
+
+    With ``mesh`` set, the client axis m is laid out over the mesh ``data``
+    axis (``repro.sharding.cohort``): the per-client elementwise passes are
+    pinned to that sharding and the two fused (M', γ) reductions run as
+    per-shard partial sums + one psum (``agg_ops.accumulate``).  Cohorts
+    padded with ``n_data = 0`` rows aggregate identically to the unpadded
+    cohort: zero weight in both sums, and excluded from the α mean below.
+    """
+    from repro.sharding.cohort import constrain_cohort
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
-    m = n_data.shape[0]
 
     dens, fracs = jax.vmap(
         functools.partial(_density_and_fraction, cfg, index))(masks)
-    x_g = jax.vmap(functools.partial(_graft_flat, index))(x, gmaps) \
-        if graft else x
+    dens = constrain_cohort(dens, mesh)
+    x_g = jax.vmap(functools.partial(_graft_flat, index))(
+        constrain_cohort(x, mesh), gmaps) if graft else x
+    x_g = constrain_cohort(x_g, mesh)
 
     if graft:
         dwrow = None   # grafting weights every depth slot equally (1.0)
@@ -254,19 +302,14 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
     alpha = None
     if scale:
         xm = x_g * dens
-        cols = []
-        for li, spec in enumerate(index.leaves):
-            rows = jnp.abs(xm[:, spec.offset:spec.offset + spec.size]
-                           .reshape(m, spec.lead, spec.rest))
-            # shifted quantile: the trim-quantile of active magnitudes equals
-            # the 1-(1-trim)·f quantile of the zero-padded row
-            q = 1.0 - (1.0 - trim) * fracs[:, li]
-            t = _row_quantile(rows, q, trim)
-            cols.append(jnp.sqrt(
-                _rows_trimmed_sq(rows, t, use_kernel, interpret)))
-        norms = jnp.concatenate(cols, axis=1)                       # (m, S)
-        alpha = jnp.mean(norms, axis=0, keepdims=True) \
-            / jnp.maximum(norms, eps)
+        norms = _cohort_norms(index, xm, fracs, trim, use_kernel, interpret,
+                              mesh)                                 # (m, S)
+        # cross-client mean weighted by row validity: pad rows (n_data = 0)
+        # must not shift α; with every row valid this is exactly the mean
+        valid = (n_data > 0).astype(jnp.float32)                    # (m,)
+        mean_norms = jnp.sum(valid[:, None] * norms, axis=0, keepdims=True) \
+            / jnp.maximum(jnp.sum(valid), 1.0)
+        alpha = mean_norms / jnp.maximum(norms, eps)
 
     row_of = jnp.asarray(index.row_of)
     gather = lambda w: jnp.take(w, row_of, axis=1, mode="clip")     # (m, N)
@@ -274,13 +317,15 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
         warow = dwrow
     else:
         warow = alpha if dwrow is None else dwrow * alpha
-    contrib = x_g * dens if warow is None else x_g * dens * gather(warow)
-    counts = dens if dwrow is None else dens * gather(dwrow)
+    contrib = constrain_cohort(
+        x_g * dens if warow is None else x_g * dens * gather(warow), mesh)
+    counts = constrain_cohort(
+        dens if dwrow is None else dens * gather(dwrow), mesh)
     ones_n = jnp.ones((index.n,), jnp.float32)
-    Mp = agg_ops.accumulate(contrib, n_data, ones_n,
-                            use_kernel=use_kernel, interpret=interpret)
-    Gm = agg_ops.accumulate(counts, n_data, ones_n,
-                            use_kernel=use_kernel, interpret=interpret)
+    Mp = agg_ops.accumulate(contrib, n_data, ones_n, use_kernel=use_kernel,
+                            interpret=interpret, mesh=mesh)
+    Gm = agg_ops.accumulate(counts, n_data, ones_n, use_kernel=use_kernel,
+                            interpret=interpret, mesh=mesh)
 
     upd = Mp / jnp.maximum(Gm, eps)
     return jnp.where(Gm > 0, upd, g_flat)  # γ = 0 keeps the global value

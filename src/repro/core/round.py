@@ -16,9 +16,16 @@ resident ``(N,)`` f32 global buffer and an ``(m, N)`` f32 cohort buffer:
 
 ``run_rounds`` drives R rounds, compiling the round once per cohort shape
 (m, batch shapes, attacker presence) and unflattening only at ``eval_every``
-boundaries for eval/checkpoint.  This is the layering the next PR shards:
-the ``(m, N)`` client axis maps onto the mesh ``data`` axis without
-re-plumbing the driver.
+boundaries for eval/checkpoint.
+
+With a mesh (``mesh=`` on ``run_rounds``/``ResidentDriver``/``flat_round``,
+built by ``repro.launch.mesh.get_mesh``), the ``(m, N)`` client axis is
+sharded over the mesh ``data`` axis (``repro.sharding.cohort``): local
+training runs data-parallel over client shards, the (M', γ) reductions
+lower to per-shard partial sums + one psum, and the (N,) global buffer
+stays replicated.  Uneven cohorts are padded host-side with inert
+``n_data = 0`` rows; the donated ping-pong of the two buffers is unchanged
+(matching in/out shardings keep XLA aliasing them).
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from repro.core import flat
 from repro.core.fedfa import STRATEGIES
 from repro.core.server import (ClientSpec, FLConfig, cohort_update,
                                default_class_masks, stack_runtimes)
+from repro.sharding import cohort as cohort_sh
 
 Params = Dict[str, Any]
 
@@ -51,7 +59,8 @@ def _fl_static(fl: FLConfig) -> Tuple:
 
 
 def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
-                    *, any_malicious: bool, donate: bool = True):
+                    *, any_malicious: bool, donate: bool = True,
+                    mesh=None, m_real: Optional[int] = None):
     """Build (or fetch) the jitted resident round program.
 
     Signature of the returned function:
@@ -60,8 +69,15 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
 
     g_buf and c_buf are donated; the new cohort buffer x reuses c_buf's
     allocation and is what the caller donates back next round.
+
+    With ``mesh`` set the program carries explicit in/out shardings: the
+    cohort-stacked arguments (and x) over the mesh ``data`` axis, g_buf /
+    key / loss replicated.  ``m_real`` (static) marks the number of real
+    rows of a padded cohort — the reported loss averages over those only
+    (pad rows are already inert in aggregation via ``n_data = 0``).
     """
-    key = (index, cfg, _fl_static(fl), bool(any_malicious), bool(donate))
+    key = (index, cfg, _fl_static(fl), bool(any_malicious), bool(donate),
+           mesh, m_real)
     fn = _ROUND_CACHE.get(key)
     if fn is not None:
         _ROUND_CACHE.move_to_end(key)
@@ -71,18 +87,31 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
     def _round(g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches, k):
         m = nd.shape[0]
         g = flat.unflatten(index, g_buf)           # leaf dtypes, inside trace
-        keys = jax.random.split(k, m)
+        # split per-client keys for the REAL rows only: padded cohorts must
+        # hand row i the same key the unpadded cohort would (the malicious
+        # label-shuffle consumes it), so pad rows reuse key 0
+        keys = jax.random.split(k, m if m_real is None else m_real)
+        if m_real is not None and m > m_real:
+            keys = jnp.concatenate(
+                [keys, jnp.broadcast_to(keys[:1],
+                                        (m - m_real,) + keys.shape[1:])])
         updated, losses = cohort_update(
             g, cfg, fl, masks, gates, batches, cms, mal, keys,
             any_malicious=any_malicious)
-        x = flat.flatten_stacked(index, updated)                    # (m, N)
+        x = cohort_sh.constrain_cohort(
+            flat.flatten_stacked(index, updated), mesh)             # (m, N)
         g_new = flat.aggregate_buffers(
             index, g_buf, x, cfg, masks, gates, gmaps, nd, trim=fl.trim,
-            use_kernel=fl.use_kernel, interpret=fl.interpret, **kw)
-        return g_new, x, jnp.mean(losses)
+            use_kernel=fl.use_kernel, interpret=fl.interpret, mesh=mesh, **kw)
+        loss = jnp.mean(losses if m_real is None else losses[:m_real])
+        return g_new, x, loss
 
+    jit_kw = {}
+    if mesh is not None:
+        jit_kw["in_shardings"], jit_kw["out_shardings"] = \
+            cohort_sh.round_shardings(mesh)
     fn = jax.jit(_round, donate_argnums=(0, 1) if donate else (),
-                 keep_unused=donate)
+                 keep_unused=donate, **jit_kw)
     _ROUND_CACHE[key] = fn
     while len(_ROUND_CACHE) > _ROUND_CACHE_MAX:
         _ROUND_CACHE.popitem(last=False)
@@ -91,7 +120,7 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
 
 def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
                fl: FLConfig, index: flat.FlatIndex, runtimes, batches, key,
-               *, any_malicious: bool = False
+               *, any_malicious: bool = False, mesh=None
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One resident round: ``flat_round(g_buf, ...) -> (g_buf', c_buf', loss)``.
 
@@ -99,23 +128,37 @@ def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
     c_buf may be None (first round of a cohort shape) — a fresh (m, N)
     scratch buffer is allocated; afterwards pass the returned cohort buffer
     back in so its allocation is reused.
+
+    With ``mesh`` set the cohort axis is sharded over the mesh ``data``
+    axis; a cohort whose m doesn't divide the data-shard count is padded
+    host-side with inert rows (``sharding.cohort.pad_cohort``), so the
+    returned cohort buffer has the padded row count.
     """
     masks, gates, gmaps, nd, cms, mal = runtimes
     m = int(nd.shape[0])
-    if c_buf is None or c_buf.is_deleted():
+    m_real = None
+    pad = cohort_sh.pad_rows(m, mesh)
+    if pad:
+        (masks, gates, gmaps, nd, cms, mal), batches = cohort_sh.pad_cohort(
+            runtimes, batches, pad)
+        m_real, m = m, m + pad
+    if c_buf is None or c_buf.is_deleted() or c_buf.shape[0] != m:
         c_buf = jnp.zeros((m, index.n), jnp.float32)
     cms_in = default_class_masks(cms, cfg, fl, m)
-    fn = make_flat_round(cfg, fl, index, any_malicious=any_malicious)
+    fn = make_flat_round(cfg, fl, index, any_malicious=any_malicious,
+                         mesh=mesh, m_real=m_real)
     return fn(g_buf, c_buf, masks, gates, gmaps, nd, cms_in, mal, batches,
               key)
 
 
 class ResidentDriver:
     """Multi-round driver state: the FlatIndex, per-m scratch cohort buffers,
-    and the donated round programs (via the module cache)."""
+    the optional mesh, and the donated round programs (via the module
+    cache)."""
 
-    def __init__(self, cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex):
-        self.cfg, self.fl, self.index = cfg, fl, index
+    def __init__(self, cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
+                 mesh=None):
+        self.cfg, self.fl, self.index, self.mesh = cfg, fl, index, mesh
         self._cbufs: Dict[int, jax.Array] = {}
 
     def round(self, g_buf: jax.Array, specs: Sequence[ClientSpec], batches,
@@ -125,7 +168,7 @@ class ResidentDriver:
         m = len(specs)
         g_buf, c_buf, loss = flat_round(
             g_buf, self._cbufs.get(m), self.cfg, self.fl, self.index,
-            runtimes, batches, key,
+            runtimes, batches, key, mesh=self.mesh,
             any_malicious=any(s.malicious for s in specs))
         self._cbufs[m] = c_buf
         return g_buf, loss
@@ -135,7 +178,7 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
                rounds: int, data_fn: Callable[[int], Tuple[Sequence[ClientSpec], Any]],
                key, *, eval_every: int = 5,
                eval_fn: Optional[Callable[[int, float, Params], None]] = None,
-               ckpt_path: Optional[str] = None
+               ckpt_path: Optional[str] = None, mesh=None
                ) -> Tuple[Params, List[float]]:
     """Drive R resident rounds; unflatten only at eval/checkpoint boundaries.
 
@@ -149,11 +192,19 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
     on the final round (``eval_every <= 0``: final round only); with
     ckpt_path set, a checkpoint is written from the resident buffer at the
     same boundaries (``checkpoint.save_from_buffer``).
-    Returns (final params tree, per-round mean losses).
+    Returns (final params tree, per-round mean losses).  ``rounds <= 0``
+    returns the input params untouched without flattening or compiling
+    anything, so scripted sweeps can no-op cleanly.
     """
+    if rounds <= 0:
+        return global_params, []
     index = flat.get_index(global_params)
-    driver = ResidentDriver(cfg, fl, index)
+    driver = ResidentDriver(cfg, fl, index, mesh=mesh)
     g_buf = flat.flatten(index, global_params)
+    if mesh is not None:
+        # place the global buffer on its replicated sharding up front so the
+        # first round's donation isn't defeated by an implicit reshard copy
+        g_buf = jax.device_put(g_buf, cohort_sh.replicated(mesh))
     losses: List[jax.Array] = []
     for r in range(rounds):
         specs, batches = data_fn(r)

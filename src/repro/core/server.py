@@ -3,12 +3,16 @@
 The round is one SPMD program: selected clients' runtimes (width masks,
 depth gates, graft maps, data counts, class masks, malicious flags) are
 stacked along a leading client axis, local training is vmapped over it, and
-aggregation scans over it.  Under pjit the client axis is sharded over the
-mesh's ``data`` axis (see repro.launch.train).
+the flat engine reduces over it.  The resident driver
+(``repro.core.round``) shards that client axis over the mesh ``data`` axis
+when given a mesh (``repro.sharding.cohort`` builds the NamedShardings;
+``launch/train.py --mesh`` threads it through); the per-round path here
+runs unsharded.
 """
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -54,10 +58,32 @@ def select_clients(n_clients: int, frac: float, rng: np.random.Generator) -> np.
     return rng.choice(n_clients, size=m, replace=False)
 
 
+_RUNTIME_CACHE: "OrderedDict[Tuple[ArchConfig, Any], Tuple]" = OrderedDict()
+_RUNTIME_CACHE_MAX = 256
+
+
+def _arch_runtime(cfg: ArchConfig, arch) -> Tuple:
+    """Memoized (masks, gates, graft map) for one (cfg, arch) — ClientSpec
+    architectures repeat across rounds, so cohort assembly shouldn't rebuild
+    the same host-side device arrays every round.  LRU-bounded like
+    ``flat._INDEX_CACHE``."""
+    key = (cfg, arch)
+    hit = _RUNTIME_CACHE.get(key)
+    if hit is None:
+        hit = _RUNTIME_CACHE[key] = (arch.masks(cfg), arch.gates(cfg),
+                                     arch.graft(cfg))
+        while len(_RUNTIME_CACHE) > _RUNTIME_CACHE_MAX:
+            _RUNTIME_CACHE.popitem(last=False)
+    else:
+        _RUNTIME_CACHE.move_to_end(key)
+    return hit
+
+
 def stack_runtimes(cfg: ArchConfig, specs: Sequence[ClientSpec]):
-    masks = stack_masks([s.arch.masks(cfg) for s in specs])
-    gates = jnp.stack([s.arch.gates(cfg) for s in specs])
-    gmaps = jnp.stack([s.arch.graft(cfg) for s in specs])
+    per_arch = [_arch_runtime(cfg, s.arch) for s in specs]
+    masks = stack_masks([t[0] for t in per_arch])
+    gates = jnp.stack([t[1] for t in per_arch])
+    gmaps = jnp.stack([t[2] for t in per_arch])
     nd = jnp.asarray([float(s.n_data) for s in specs], jnp.float32)
     cms = None
     if any(s.class_mask is not None for s in specs):
@@ -150,7 +176,7 @@ def fl_round(global_params: Params, cfg: ArchConfig, fl: FLConfig,
 def fl_round_flat(g_buf: jax.Array, cfg: ArchConfig, fl: FLConfig,
                   specs: Sequence[ClientSpec], client_batches, key,
                   *, index=None, c_buf: Optional[jax.Array] = None,
-                  any_malicious: Optional[bool] = None):
+                  any_malicious: Optional[bool] = None, mesh=None):
     """Flat-native counterpart of ``fl_round``: one round on the resident
     (N,) global buffer, sharing ``stack_runtimes`` with the per-round path.
 
@@ -168,7 +194,7 @@ def fl_round_flat(g_buf: jax.Array, cfg: ArchConfig, fl: FLConfig,
     if any_malicious is None:
         any_malicious = any(s.malicious for s in specs)
     return round_mod.flat_round(g_buf, c_buf, cfg, fl, index, runtimes,
-                                client_batches, key,
+                                client_batches, key, mesh=mesh,
                                 any_malicious=any_malicious)
 
 

@@ -5,6 +5,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.fedfa_agg import ref
 from repro.kernels.fedfa_agg.kernel import scaled_accum, trimmed_sumsq
@@ -35,12 +37,10 @@ def trimmed_norm(w_flat: jax.Array, thresh: jax.Array, *,
     return jnp.sqrt(ss)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
-def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
-               use_kernel=None, interpret=False) -> jax.Array:
-    """Fused Σ_c weights[c]·x[c]·mask over the client axis. x: (m, n)."""
-    if use_kernel is None:
-        use_kernel = _on_tpu()
+def _accum_local(x: jax.Array, weights: jax.Array, mask: jax.Array,
+                 use_kernel: bool, interpret: bool) -> jax.Array:
+    """The unsharded accumulate body: Σ_c weights[c]·x[c]·mask on whatever
+    slice of the client axis this device holds."""
     if not (use_kernel or interpret):
         return ref.scaled_accum_ref(x, weights, mask)
     m, n = x.shape
@@ -51,3 +51,30 @@ def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
     out = scaled_accum(xp, weights, mp, block=block,
                        interpret=interpret or not _on_tpu())
     return out[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "interpret", "mesh"))
+def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
+               use_kernel=None, interpret=False, mesh=None) -> jax.Array:
+    """Fused Σ_c weights[c]·x[c]·mask over the client axis. x: (m, n).
+
+    With ``mesh`` set (and the client axis laid out over its ``data`` axis,
+    see ``repro.sharding.cohort``), the reduction is expressed with
+    ``shard_map``: each device reduces its own client shard — through the
+    Pallas kernel on TPU — and a single ``psum`` combines the partial sums,
+    so the lowering never materializes a replicated (m, n) gather.
+    """
+    from repro.sharding.cohort import shardable
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not shardable(mesh, x.shape[0]):
+        return _accum_local(x, weights, mask, use_kernel, interpret)
+
+    def _shard(xs, ws, ms):
+        part = _accum_local(xs, ws, ms, use_kernel, interpret)
+        return jax.lax.psum(part, "data")
+
+    return shard_map(_shard, mesh=mesh,
+                     in_specs=(P("data", None), P("data"), P(None)),
+                     out_specs=P(None), check_rep=False)(x, weights, mask)

@@ -18,3 +18,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU tests of the sharded code paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_data=None):
+    """All local devices on the ``data`` axis — the sharded resident round's
+    mesh on CPU hosts (use ``XLA_FLAGS=--xla_force_host_platform_device_count=K``
+    to test multi-shard lowering without accelerators)."""
+    n = jax.device_count() if n_data is None else n_data
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def get_mesh(name):
+    """CLI-level mesh selection: ``none`` | ``host`` | ``production``.
+
+    ``host`` puts every local device on the data axis (degenerates to the
+    1x1 host mesh on a single-device CPU); ``production`` is the TPU v5e
+    pod mesh above.
+    """
+    if name is None or name == "none":
+        return None
+    if name == "host":
+        return make_data_mesh()
+    if name == "production":
+        return make_production_mesh()
+    raise ValueError(f"unknown mesh {name!r} (none|host|production)")

@@ -89,7 +89,8 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
            eval_every: int = 5, task: str = "cls",
            width_mults=(0.25, 0.5, 0.75, 1.0),
            arch_mode: str = "width", agg_engine: str = "flat",
-           driver: str = "resident", use_kernel: Optional[bool] = None,
+           driver: str = "resident", mesh: Optional[str] = None,
+           use_kernel: Optional[bool] = None,
            interpret: bool = False, ckpt: Optional[str] = None,
            quiet: bool = False) -> dict:
     import jax
@@ -194,11 +195,19 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
                   "per-round driver for agg_engine=tree", flush=True)
         driver = "per-round"
 
+    from repro.launch.mesh import get_mesh
+    mesh_obj = get_mesh(mesh)
+    if mesh_obj is not None and driver != "resident":
+        if not quiet:
+            print("--mesh shards the resident driver's cohort axis; the "
+                  "per-round driver runs unsharded", flush=True)
+        mesh_obj = None
+
     if driver == "resident":
         from repro.core.round import run_rounds
         params, _ = run_rounds(params, cfg, fl, rounds, round_data, key,
                                eval_every=eval_every, eval_fn=record_eval,
-                               ckpt_path=ckpt)
+                               ckpt_path=ckpt, mesh=mesh_obj)
     else:
         from repro.checkpoint import checkpoint as ckpt_mod
         for r in range(rounds):
@@ -210,8 +219,10 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
                 if ckpt is not None:
                     ckpt_mod.save(f"{ckpt}_r{r:05d}", params,
                                   meta={"round": r, "strategy": strategy})
-    hist["final_acc"] = hist["global_acc"][-1]
-    hist["final_local_acc"] = hist["local_acc"][-1]
+    # rounds=0 (or eval_every configurations that never fire) leaves the
+    # history empty — a scripted sweep no-op, not an IndexError
+    hist["final_acc"] = hist["global_acc"][-1] if hist["global_acc"] else None
+    hist["final_local_acc"] = hist["local_acc"][-1] if hist["local_acc"] else None
     return hist
 
 
@@ -244,6 +255,10 @@ def main() -> None:
                     default="resident",
                     help="resident: one jitted round program with donated "
                          "(N,)/(m,N) buffers; per-round: re-dispatch each round")
+    ap.add_argument("--mesh", choices=["none", "host", "production"],
+                    default="none",
+                    help="shard the resident round's client axis over the "
+                         "mesh data axis (host: all local devices)")
     ap.add_argument("--use-kernel", choices=["auto", "on", "off"],
                     default="auto",
                     help="flat engine: Pallas kernel dispatch (auto=TPU only)")
@@ -266,6 +281,7 @@ def main() -> None:
                      arch_mode=args.arch_mode, task=args.task,
                      eval_every=args.eval_every,
                      agg_engine=args.agg_engine, driver=args.driver,
+                     mesh=args.mesh,
                      use_kernel={"auto": None, "on": True,
                                  "off": False}[args.use_kernel],
                      interpret=args.interpret, ckpt=args.ckpt)

@@ -1,0 +1,114 @@
+"""Cohort-axis sharding for the resident FL round.
+
+The resident round (``repro.core.round.flat_round``) is an SPMD reduction
+over the client cohort: every argument with a leading client axis m — the
+(m, N) cohort buffer, stacked width masks / depth gates / graft maps, data
+counts, class masks, malicious flags and the stacked local batches — is
+partitioned over the mesh ``data`` axis, while the (N,) global buffer (and
+the PRNG key) stay replicated.  Local training then runs data-parallel over
+client shards and the fused (M', γ) reductions lower to per-shard partial
+sums plus one ``psum`` (see ``repro.kernels.fedfa_agg.ops.accumulate``).
+
+Uneven cohorts (m % n_data_shards != 0) are handled host-side by padding
+the cohort with inert rows: ``n_data = 0`` zeroes a pad row's weight in
+both accumulated sums (the γ = 0 keep-global rule already covers segments
+nobody updates) and the round program averages the reported loss over the
+real rows only.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+DATA_AXIS = "data"
+
+
+def data_shards(mesh: Optional[Mesh]) -> int:
+    """Number of shards of the client axis (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape[DATA_AXIS])
+
+
+def shardable(mesh: Optional[Mesh], m: int) -> bool:
+    """Can a client axis of length m be shard_map'ed over this mesh?
+    (mesh present, has the data axis, and divides m — padded cohorts always
+    qualify; callers fall back to the unsharded body otherwise)."""
+    return (mesh is not None and DATA_AXIS in mesh.axis_names
+            and m % data_shards(mesh) == 0)
+
+
+def cohort_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading client axis over ``data``, everything else replicated.
+
+    A PartitionSpec shorter than the array rank leaves trailing dims
+    replicated, so one sharding covers every cohort-stacked leaf — the
+    (m, N) buffer, (m,) counts/flags, (m, R) gates, (m, E, B, S) batches —
+    and works as a pytree prefix for whole argument subtrees.
+    """
+    return NamedSharding(mesh, P(DATA_AXIS))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """(in_shardings, out_shardings) for the resident round program
+
+      (g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches, key)
+        -> (g_buf', x, loss)
+
+    matching ``repro.core.round.make_flat_round``: cohort-stacked arguments
+    sharded over ``data``, the global buffer / key / loss replicated.  The
+    donated pairs keep matching shardings (g_buf -> g_buf' replicated,
+    c_buf -> x cohort-sharded) so XLA can still alias their buffers.
+    """
+    co, rep = cohort_sharding(mesh), replicated(mesh)
+    return ((rep, co, co, co, co, co, co, co, co, rep), (rep, co, rep))
+
+
+def constrain_cohort(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
+    """Pin a client-stacked intermediate to the cohort sharding.
+
+    Applied to the (m, N) tensors inside ``flat.aggregate_buffers`` so
+    GSPMD keeps the per-client elementwise work sharded instead of
+    resolving the reduction operands to a replicated gather.
+    """
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, cohort_sharding(mesh))
+
+
+def pad_rows(m: int, mesh: Optional[Mesh]) -> int:
+    """Pad rows needed to make the cohort divisible by the data shards."""
+    return (-m) % data_shards(mesh)
+
+
+def _pad_leading(tree: Any, pad: int) -> Any:
+    """Append ``pad`` copies of row 0 along every leaf's leading axis (row
+    content is arbitrary for pad rows — repeating a real row keeps shapes,
+    dtypes and mask semantics valid)."""
+    return jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]), tree)
+
+
+def pad_cohort(runtimes: Tuple, batches: Any, pad: int) -> Tuple[Tuple, Any]:
+    """Pad the ``server.stack_runtimes`` tuple + stacked batches with inert
+    rows: masks/gates/gmaps/class-masks/batches repeat row 0, ``n_data`` is
+    0 (zero weight in both (M', γ) sums) and ``malicious`` is 0.
+    """
+    if pad <= 0:
+        return runtimes, batches
+    masks, gates, gmaps, nd, cms, mal = runtimes
+    zeros = jnp.zeros((pad,), jnp.float32)
+    padded = (_pad_leading(masks, pad), _pad_leading(gates, pad),
+              _pad_leading(gmaps, pad), jnp.concatenate([nd, zeros]),
+              None if cms is None else _pad_leading(cms, pad),
+              jnp.concatenate([mal, zeros]))
+    return padded, _pad_leading(batches, pad)

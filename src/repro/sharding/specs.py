@@ -166,9 +166,11 @@ def sanitize_specs(spec_tree, abstract_tree, mesh):
     jax.jit's explicit in/out shardings require exact divisibility (unlike
     internal GSPMD propagation); non-divisible dims (odd vocabs, kv_heads=8
     on a 16-way model axis, batch=1 long-context decode) fall back to
-    replication.  Each fallback is an honest memory/roofline cost visible
-    in the dry-run — padding configs away is a §Perf iteration, not a
-    default.
+    replication.  A spec naming an axis the mesh doesn't have (e.g. a
+    ("pod", "data") FSDP spec sanitized against the 2-axis single-pod mesh)
+    is likewise treated as non-divisible and replicated.  Each fallback is
+    an honest memory/roofline cost visible in the dry-run — padding configs
+    away is a §Perf iteration, not a default.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
@@ -185,8 +187,11 @@ def sanitize_specs(spec_tree, abstract_tree, mesh):
             axes = ent if isinstance(ent, tuple) else (ent,)
             total = 1
             for a in axes:
+                if a not in sizes:      # axis absent from this mesh
+                    total = 0
+                    break
                 total *= sizes[a]
-            out.append(ent if dim % total == 0 else None)
+            out.append(ent if total and dim % total == 0 else None)
         return P(*out)
 
     return jax.tree.map(fix, spec_tree, abstract_tree,

@@ -1,0 +1,65 @@
+"""Subprocess body for the multi-device sharded-round tests.
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (set by
+the parent test — the flag is read at jax init, so it cannot be toggled
+inside the main pytest process): sharded-vs-unsharded resident parity for
+fedfa + heterofl on an UNEVEN m=3 cohort over 4 devices (one pad row,
+``n_data = 0``) with a malicious client, plus buffer donation under
+NamedSharding.  Prints ``MULTIDEVICE OK`` on success.
+"""
+import jax
+import numpy as np
+
+# the parent test adds tests/ to the child's PYTHONPATH
+from conftest import assert_tree_allclose, fl_round_fixture, make_cohort
+
+from repro.core import flat
+from repro.core import round as round_mod
+from repro.core.server import FLConfig, stack_runtimes
+from repro.launch.mesh import make_data_mesh
+from repro.sharding import cohort as csh
+
+assert jax.device_count() == 4, \
+    f"expected 4 forced host devices, got {jax.device_count()}"
+
+CFG, PARAMS = fl_round_fixture()
+M, E = 3, 2
+KEY = jax.random.PRNGKey(0)
+SPECS, data_fn = make_cohort(CFG, M, local_steps=E, malicious_frac=0.34)
+assert any(s.malicious for s in SPECS), "cohort must include an attacker"
+MESH = make_data_mesh()
+assert MESH.shape["data"] == 4
+
+
+# --- parity: m=3 cohort padded to 4 shards must match the unsharded round
+for strategy in ("fedfa", "heterofl"):
+    fl = FLConfig(local_steps=E, lr=0.05, strategy=strategy, task="cls",
+                  agg_engine="flat")
+    p_un, l_un = round_mod.run_rounds(PARAMS, CFG, fl, 2, data_fn, KEY,
+                                      eval_every=0)
+    p_sh, l_sh = round_mod.run_rounds(PARAMS, CFG, fl, 2, data_fn, KEY,
+                                      eval_every=0, mesh=MESH)
+    np.testing.assert_allclose(l_un, l_sh, rtol=1e-4)
+    assert_tree_allclose(p_un, p_sh)
+    print(f"parity {strategy}: OK")
+
+# --- donation still effective under NamedSharding (program cached above)
+fl = FLConfig(local_steps=E, lr=0.05, strategy="fedfa", task="cls",
+              agg_engine="flat")
+index = flat.get_index(PARAMS)
+runtimes = stack_runtimes(CFG, SPECS)
+_, batches = data_fn(0)
+g_buf = jax.device_put(flat.flatten(index, PARAMS), csh.replicated(MESH))
+g2, c2, _ = round_mod.flat_round(g_buf, None, CFG, fl, index, runtimes,
+                                 batches, KEY, mesh=MESH, any_malicious=True)
+assert g_buf.is_deleted(), "donated global buffer not consumed"
+assert c2.shape == (4, index.n), c2.shape          # padded to the 4 shards
+assert c2.sharding.spec == jax.sharding.PartitionSpec("data")
+g3, c3, _ = round_mod.flat_round(g2, c2, CFG, fl, index, runtimes, batches,
+                                 KEY, mesh=MESH, any_malicious=True)
+assert g2.is_deleted() and c2.is_deleted(), \
+    "ping-pong donation broken under NamedSharding"
+assert not (g3.is_deleted() or c3.is_deleted())
+print("donation: OK")
+
+print("MULTIDEVICE OK")

@@ -19,6 +19,55 @@ def tiny(name: str, **over):
     return cfg.replace(**over) if over else cfg
 
 
+_FL_FIXTURE = {}
+
+
+def fl_round_fixture():
+    """Shared (cfg, params) for the round-driver / sharded-round suites: the
+    tiny 4-layer/2-section classification config and its init params, built
+    once per process (init_params is the expensive part)."""
+    if not _FL_FIXTURE:
+        from repro.models import model as model_mod
+        cfg = tiny("smollm-135m").replace(n_layers=4, n_sections=2,
+                                          vocab_size=64, tie_embeddings=False)
+        _FL_FIXTURE["cfg"] = cfg
+        _FL_FIXTURE["params"] = model_mod.init_params(
+            cfg, jax.random.PRNGKey(0))
+    return _FL_FIXTURE["cfg"], _FL_FIXTURE["params"]
+
+
+def make_cohort(cfg, m, *, n_classes=10, seq=8, batch=2, local_steps=2,
+                malicious_frac=0.0, seed=0):
+    """(specs, data_fn) for an m-client synthetic classification cohort —
+    data_fn(r) returns (specs, stacked jnp batches) exactly like
+    launch.train's per-round selection, deterministically in r."""
+    import jax.numpy as jnp
+    from repro.core.server import make_client_specs
+    from repro.data import partition as part_mod
+    from repro.data import pipeline, synthetic
+    from repro.launch.train import client_arch_pool
+    specs = make_client_specs(cfg, m, archs=client_arch_pool(cfg, "width"),
+                              malicious_frac=malicious_frac, seed=seed)
+    parts = part_mod.iid_partition(m, n_classes, seed=seed)
+    profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size,
+                                             seed=seed)
+
+    def data_fn(r):
+        b = pipeline.round_batches_cls(
+            parts, list(range(m)), n_classes, cfg.vocab_size,
+            local_steps=local_steps, batch=batch, seq_len=seq,
+            profiles=profiles, seed=100 + r)
+        return specs, {k: jnp.asarray(v) for k, v in b.items()}
+    return specs, data_fn
+
+
+def assert_tree_allclose(a, b, rtol=2e-4, atol=2e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
 def make_batch(cfg, B=2, S=16, key=0):
     import jax.numpy as jnp
     k = jax.random.PRNGKey(key)

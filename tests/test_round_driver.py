@@ -5,21 +5,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import tiny
+from conftest import assert_tree_allclose as _assert_tree_allclose
+from conftest import fl_round_fixture, make_cohort
 
 from repro.core import flat
 from repro.core import round as round_mod
 from repro.core.server import FLConfig, fl_round, fl_round_flat, \
-    make_client_specs, stack_runtimes
-from repro.data import partition as part_mod
-from repro.data import pipeline, synthetic
-from repro.models import model as model_mod
+    stack_runtimes
 
-CFG = tiny("smollm-135m").replace(n_layers=4, n_sections=2, vocab_size=64,
-                                  tie_embeddings=False)
-N_CLASSES, SEQ, BATCH, E, M = 10, 8, 2, 2, 3
+CFG, PARAMS = fl_round_fixture()
+E, M = 2, 3
 KEY = jax.random.PRNGKey(0)
-PARAMS = model_mod.init_params(CFG, KEY)
 
 
 def _fl(strategy):
@@ -29,25 +25,7 @@ def _fl(strategy):
 
 @pytest.fixture(scope="module")
 def cohort():
-    from repro.launch.train import client_arch_pool
-    specs = make_client_specs(CFG, M, archs=client_arch_pool(CFG, "width"),
-                              seed=0)
-    parts = part_mod.iid_partition(M, N_CLASSES, seed=0)
-    profiles = synthetic.make_class_profiles(N_CLASSES, CFG.vocab_size, seed=0)
-
-    def data_fn(r):
-        b = pipeline.round_batches_cls(
-            parts, list(range(M)), N_CLASSES, CFG.vocab_size, local_steps=E,
-            batch=BATCH, seq_len=SEQ, profiles=profiles, seed=100 + r)
-        return specs, {k: jnp.asarray(v) for k, v in b.items()}
-    return specs, data_fn
-
-
-def _assert_tree_allclose(a, b, rtol=2e-4, atol=2e-5):
-    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
-        np.testing.assert_allclose(np.asarray(x, np.float32),
-                                   np.asarray(y, np.float32),
-                                   rtol=rtol, atol=atol)
+    return make_cohort(CFG, M, local_steps=E)
 
 
 @pytest.mark.parametrize("strategy", ["fedfa", "heterofl"])
