@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check bench-round bench-aggregate bench-shard
+.PHONY: tier1 check bench-round bench-aggregate bench-shard bench-quantile
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
@@ -18,3 +18,7 @@ bench-aggregate:  ## flat vs tree aggregation engines -> BENCH_aggregate.json
 bench-shard:      ## sharded vs unsharded resident round on 4 forced CPU devices -> BENCH_shard.json
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
 		$(PY) benchmarks/bench_shard.py
+
+bench-quantile:   ## fused trimmed-quantile kernel vs top_k path (4 forced CPU devices) -> BENCH_quantile.json
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+		$(PY) benchmarks/bench_quantile.py

@@ -1,0 +1,240 @@
+"""Trimmed-quantile path benchmark: fused Pallas kernel vs top_k tail path.
+
+CPU wall-clock is NOT the gated signal here: the fused kernel only compiles
+on TPU, so off-TPU it runs in Pallas interpret mode, which is slow by
+construction (the json records wall times for transparency only).  The
+stable, gated signals are structural, measured on the traced program:
+
+  * row reads — compute ops consuming row-block-sized data: the fused
+    kernel is ONE read of each cohort row (the 31-step count-and-partition
+    refinement happens in VMEM), the top_k path is 4+ (abs, sort, compare,
+    square-reduce);
+  * sorts — the fused path contains zero sort/top_k ops;
+  * collectives — on a multi-device backend the kernelized ``_cohort_norms``
+    still lowers with ZERO all-gathers under the data mesh (PR 3's
+    invariant; XLA's top_k partitioning is what used to re-gather).
+
+Emits ``BENCH_quantile.json`` — the quantile-path trajectory anchor.
+
+  PYTHONPATH=src python benchmarks/bench_quantile.py [--smoke]
+  # multi-device collective check needs forced devices, e.g.:
+  # XLA_FLAGS=--xla_force_host_platform_device_count=4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# layout/dtype plumbing, not memory passes in a fused XLA program
+_LAYOUT_PRIMS = {"reshape", "broadcast_in_dim", "squeeze", "transpose",
+                 "convert_element_type", "copy", "slice"}
+_SORT_PRIMS = {"sort", "top_k", "approx_top_k"}
+
+
+def _sub_jaxprs(eqn):
+    import jax
+    out = []
+    for v in eqn.params.values():
+        for u in (v if isinstance(v, (list, tuple)) else [v]):
+            if isinstance(u, jax.extend.core.ClosedJaxpr):
+                out.append(u.jaxpr)
+            elif isinstance(u, jax.extend.core.Jaxpr):
+                out.append(u)
+    return out
+
+
+def _walk_counts(jaxpr, row_elems):
+    """(row_reads, sorts) over a jaxpr: compute eqns with a row-block-sized
+    operand, recursing through call-like eqns.  A pallas_call counts as ONE
+    read and is not recursed into — its inner jaxpr is VMEM-resident work,
+    which is exactly the fusion being measured."""
+    reads = sorts = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        rowsized = any(
+            getattr(v, "aval", None) is not None and v.aval.size == row_elems
+            for v in eqn.invars)
+        if name == "pallas_call":
+            reads += bool(rowsized)
+            continue
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for s in subs:
+                r, k = _walk_counts(s, row_elems)
+                reads += r
+                sorts += k
+            continue
+        if name in _SORT_PRIMS:
+            sorts += 1
+        if rowsized and name not in _LAYOUT_PRIMS:
+            reads += 1
+    return reads, sorts
+
+
+def _structural(m, R, L, trim=0.95):
+    """Trace both paths of the flat engine's per-leaf trimmed-norm pass on
+    one (m, R, L) row block and count row reads / sorts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+
+    rows = jax.random.normal(jax.random.PRNGKey(0), (m, R, L), jnp.float32)
+    q = jnp.full((m,), 1.0 - (1.0 - trim) * 0.5, jnp.float32)
+
+    def topk(rows, q):
+        ra = jnp.abs(rows)
+        t = flat._row_quantile(ra, q, trim)
+        return jnp.sqrt(flat._rows_trimmed_sq(ra, t))
+
+    def fused(rows, q):
+        _, sq = flat._rows_trimmed_stats(rows, q, trim, True, True)
+        return jnp.sqrt(sq)
+
+    out = {}
+    for name, fn in (("topk", topk), ("fused", fused)):
+        jaxpr = jax.make_jaxpr(fn)(rows, q)
+        reads, sorts = _walk_counts(jaxpr.jaxpr, rows.size)
+        out[name] = {"row_reads": reads, "sorts": sorts}
+    return out
+
+
+def _cohort_setup(model, m):
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core import flat
+    from repro.models import model as model_mod
+    from repro.models.masks import ClientArch, full_client, stack_masks
+
+    cfg = get_arch(model).reduced().replace(n_layers=4, n_sections=2)
+    g = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    index = flat.get_index(g)
+    pool = [ClientArch(0.25, (1, 1)), ClientArch(0.5, (2, 1)),
+            ClientArch(1.0, (1, 2)), full_client(cfg)]
+    masks = stack_masks([pool[i % len(pool)].masks(cfg) for i in range(m)])
+    dens, fracs = jax.vmap(
+        functools.partial(flat._density_and_fraction, cfg, index))(masks)
+    xm = jax.random.normal(jax.random.PRNGKey(1), (m, index.n),
+                           jnp.float32) * dens
+    return index, xm, fracs
+
+
+def _wall(index, xm, fracs, iters, use_kernel, interpret):
+    import jax
+    from repro.core import flat
+
+    fn = jax.jit(lambda x, f: flat._cohort_norms(
+        index, x, f, 0.95, use_kernel, interpret))
+    jax.block_until_ready(fn(xm, fracs))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(xm, fracs))
+    return (time.perf_counter() - t0) / iters
+
+
+def _collectives(index, xm, fracs, mesh):
+    """Lower + compile the kernelized pass under the mesh; count collectives."""
+    import re
+    import jax
+    from repro.core import flat
+    from repro.sharding import cohort as csh
+
+    fn = jax.jit(lambda x, f: flat._cohort_norms(
+        index, x, f, 0.95, True, True, mesh=mesh))
+    x = jax.device_put(xm, csh.cohort_sharding(mesh))
+    fr = jax.device_put(fracs, csh.cohort_sharding(mesh))
+    txt = fn.lower(x, fr).compile().as_text()
+    counts = {}
+    for kind in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
+        counts[kind] = len(re.findall(
+            rf"\s{kind}(?:-start)?\(", txt))
+    return counts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="smollm-135m")
+    ap.add_argument("--cohorts", nargs="+", type=int, default=[4, 16])
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--row-block", nargs=3, type=int, default=[4, 8, 512],
+                    metavar=("M", "R", "L"),
+                    help="(clients, rows, row length) for the structural "
+                         "read/sort counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="m=4 only, 2 iters — the tier-1 CI configuration")
+    ap.add_argument("--out", default=None,
+                    help="output json (default: BENCH_quantile.json, or "
+                         "results/BENCH_quantile_smoke.json with --smoke so "
+                         "CI never clobbers the checked-in anchor)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.cohorts, args.iters = [4], 2
+    if args.out is None:
+        args.out = "results/BENCH_quantile_smoke.json" if args.smoke \
+            else "BENCH_quantile.json"
+
+    import jax
+    from repro.launch.mesh import make_data_mesh
+
+    m_s, r_s, l_s = args.row_block
+    structural = _structural(m_s, r_s, l_s)
+    results = {"backend": jax.default_backend(),
+               "n_devices": jax.device_count(),
+               "row_block": {"m": m_s, "rows": r_s, "row_len": l_s},
+               "structural": structural, "runs": {}}
+    ok = True
+    print(f"row block ({m_s}, {r_s}, {l_s}):  "
+          f"topk reads={structural['topk']['row_reads']} "
+          f"sorts={structural['topk']['sorts']}  |  "
+          f"fused reads={structural['fused']['row_reads']} "
+          f"sorts={structural['fused']['sorts']}", flush=True)
+    if structural["fused"]["row_reads"] != 1:
+        print("FAIL: fused path does not read the row block exactly once",
+              flush=True)
+        ok = False
+    if structural["fused"]["row_reads"] >= structural["topk"]["row_reads"]:
+        print("FAIL: fused path does not beat the top_k path on row reads",
+              flush=True)
+        ok = False
+    if structural["fused"]["sorts"] != 0 or structural["topk"]["sorts"] < 1:
+        print("FAIL: sort counts wrong (fused must have none, top_k >= 1)",
+              flush=True)
+        ok = False
+
+    for m in args.cohorts:
+        index, xm, fracs = _cohort_setup(args.model, m)
+        dt_topk = _wall(index, xm, fracs, args.iters, False, False)
+        dt_fused = _wall(index, xm, fracs, args.iters, True, True)
+        rec = {"n_params": index.n, "n_segments": index.n_segments,
+               "topk_mean_s": round(dt_topk, 5),
+               "fused_interpret_mean_s": round(dt_fused, 5)}
+        if jax.device_count() > 1:
+            counts = _collectives(index, xm, fracs, make_data_mesh())
+            rec["collectives"] = counts
+            if counts.get("all-gather", 0) > 0:
+                print(f"FAIL: {counts['all-gather']} all-gather(s) in the "
+                      f"kernelized _cohort_norms at m={m}", flush=True)
+                ok = False
+        results["runs"][f"{args.model}/m{m}"] = rec
+        print(f"{args.model} m={m:3d}  topk {dt_topk*1e3:8.1f} ms  "
+              f"fused(interpret) {dt_fused*1e3:8.1f} ms  "
+              f"collectives {rec.get('collectives', 'n/a (1 device)')}",
+              flush=True)
+
+    out = args.out if os.path.isabs(args.out) else os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                     args.out))
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -115,9 +115,10 @@ def bench_aggregation():
 
 def check() -> None:
     """Tier-1 CI gate: the repo's fast test suite plus smoke benchmarks of
-    the resident round driver and the sharded round path, so perf and
-    sharding regressions fail loudly alongside correctness ones.  Exits
-    non-zero on any failure.
+    the resident round driver, the sharded round path, and the fused
+    trimmed-quantile path (structural row-read/sort/collective gates), so
+    perf and sharding regressions fail loudly alongside correctness ones.
+    Exits non-zero on any failure.
 
         PYTHONPATH=src python benchmarks/run.py --check
     """
@@ -140,6 +141,10 @@ def check() -> None:
           "--smoke", "--min-speedup", "1.5"], env),
         ("sharded-round smoke bench (4 forced CPU devices)",
          [sys.executable, os.path.join(root, "benchmarks", "bench_shard.py"),
+          "--smoke"], shard_env),
+        ("quantile-path smoke bench (4 forced CPU devices)",
+         [sys.executable,
+          os.path.join(root, "benchmarks", "bench_quantile.py"),
           "--smoke"], shard_env),
     ]
     for name, cmd, step_env in steps:

@@ -1,6 +1,13 @@
 """FedFA server-side machinery: layer grafting (Alg. 2), global model
 distribution (Alg. 3), and scalable aggregation (Alg. 1).
 
+The per-leaf tree engine here is ORACLE-ONLY: the production aggregation
+path is the flat engine (``repro.core.flat``, ``engine="flat"``, the
+default everywhere).  The tree implementation is kept as an
+independently-written Alg. 1 that the flat engine is differentially tested
+against (``tests/test_differential_oracle.py``); do not build new features
+on it.
+
 Memory-conscious design: the accumulation over clients runs as a
 ``lax.scan`` with (M', γ) carry — only two global-model-sized buffers live
 at once regardless of cohort size — and the per-client trimmed-norm pass is
@@ -166,10 +173,12 @@ def aggregate(global_params: Params, stacked_params: Params, cfg: ArchConfig,
     axis m.  Returns the new global model; elements no client updated keep
     their previous global value (γ = 0 case).
 
-    engine="tree" runs the original per-leaf tree-map/scan implementation;
-    engine="flat" runs the same algorithm on one contiguous (m, N) buffer
-    with fused segment kernels (repro.core.flat), dispatching to the Pallas
-    fedfa_agg kernels on TPU.  use_kernel/interpret are flat-engine knobs.
+    engine="flat" (the production path) runs Alg. 1 on one contiguous
+    (m, N) buffer with fused segment kernels (repro.core.flat), dispatching
+    to the Pallas fedfa_agg/fedfa_quantile kernels on TPU;
+    use_kernel/interpret are flat-engine knobs.  engine="tree" is the
+    original per-leaf tree-map/scan implementation, kept as a test-only
+    differential oracle — slower, and not maintained for new features.
     """
     if engine == "flat":
         from repro.core import flat

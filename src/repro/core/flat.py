@@ -9,9 +9,11 @@ gather maps) and reimplements the algorithm as a handful of segment-wise
 passes over the flat cohort buffer:
 
   * graft (Alg. 2)          — one flat gather per client,
-  * trimmed norms (§4.3)    — per-leaf row quantiles vmapped over clients,
-                              trimmed sum-of-squares via the Pallas
-                              ``trimmed_sumsq`` kernel on TPU,
+  * trimmed norms (§4.3)    — per-(client, segment) quantile threshold AND
+                              trimmed sum-of-squares fused into ONE pass
+                              over each cohort row via the Pallas
+                              ``fedfa_quantile`` kernel on TPU (jnp top_k
+                              tail path on CPU),
   * (M', γ) accumulation    — two fused weighted reductions over the client
                               axis via the Pallas ``scaled_accum`` kernel on
                               TPU (pure-jnp ``ref`` fallback on CPU).
@@ -40,6 +42,7 @@ from repro.core.fedfa import _path_stage_info
 from repro.core.masking import (AX, active_fraction, axis_mask_tree,
                                 mask_density)
 from repro.kernels.fedfa_agg import ops as agg_ops
+from repro.kernels.fedfa_quantile import ops as quant_ops
 from repro.models.masks import WidthMasks
 
 Params = Dict[str, Any]
@@ -211,16 +214,34 @@ def _row_quantile(rows_abs: jax.Array, q: jax.Array, trim: float) -> jax.Array:
     return v0 + (v1 - v0) * frac[:, None]
 
 
-def _rows_trimmed_sq(rows: jax.Array, t: jax.Array, use_kernel: bool,
-                     interpret: bool) -> jax.Array:
-    """Σ w²·[|w|<=t] over the last axis. rows (m, R, L), t (m, R) -> (m, R)."""
-    if use_kernel or interpret:
-        f = lambda w, s: agg_ops.trimmed_norm(
-            w, s, use_kernel=use_kernel, interpret=interpret)
-        nrm = jax.vmap(jax.vmap(f))(rows, t)
-        return nrm * nrm
+def _rows_trimmed_sq(rows: jax.Array, t: jax.Array) -> jax.Array:
+    """Σ w²·[|w|<=t] over the last axis. rows (m, R, L), t (m, R) -> (m, R).
+    Companion of the jnp top_k path; the kernel path fuses this reduction
+    into the quantile pass itself (``_rows_trimmed_stats``)."""
     return jnp.sum(jnp.where(jnp.abs(rows) <= t[..., None], rows * rows, 0.0),
                    axis=-1)
+
+
+def _rows_trimmed_stats(rows: jax.Array, q: jax.Array, trim: float,
+                        use_kernel: bool, interpret: bool) -> Tuple:
+    """Per-row (quantile threshold, trimmed Σw²) for SIGNED rows (m, R, L)
+    with per-client q (m,) -> ((m, R), (m, R)).
+
+    Kernel path (``use_kernel``/``interpret``): the fused Pallas
+    ``fedfa_quantile`` kernel — threshold by bit-pattern count-and-partition
+    plus the trimmed reduction in one read of each row.  jnp path: exact
+    top-(1-trim) tail quantile (``_row_quantile``) then a masked reduction —
+    separate passes over the data.
+    """
+    m, R, L = rows.shape
+    if use_kernel or interpret:
+        t, sq = quant_ops.row_trimmed_stats(
+            rows.reshape(m * R, L), jnp.repeat(q, R),
+            use_kernel=use_kernel, interpret=interpret)
+        return t.reshape(m, R), sq.reshape(m, R)
+    rows_abs = jnp.abs(rows)
+    t = _row_quantile(rows_abs, q, trim)
+    return t, _rows_trimmed_sq(rows_abs, t)
 
 
 def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
@@ -229,26 +250,26 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
     """Per-(client, segment) trimmed norms: (m, N) masked updates +
     (m, n_leaves) active fractions -> (m, S).
 
-    Every op here — per-leaf slicing along N, |.|, the top-k row quantile,
+    Every op here — per-leaf slicing along N, |.|, the quantile threshold,
     the trimmed sum of squares — is independent per client, so under a mesh
-    the whole pass runs inside ``shard_map`` on each device's client shard.
-    Left to sharding propagation, XLA's top_k partitioning instead
-    all-gathers the client axis leaf by leaf, which re-materializes the
-    cohort buffer on every device.
+    the whole pass runs inside ``shard_map`` on each device's client shard
+    (the fused quantile kernel is per-row and adds no collective).  Left to
+    sharding propagation, XLA's top_k partitioning instead all-gathers the
+    client axis leaf by leaf, which re-materializes the cohort buffer on
+    every device.
     """
 
     def norms_local(xm_l, fracs_l):
         m_l = xm_l.shape[0]
         cols = []
         for li, spec in enumerate(index.leaves):
-            rows = jnp.abs(xm_l[:, spec.offset:spec.offset + spec.size]
-                           .reshape(m_l, spec.lead, spec.rest))
+            rows = xm_l[:, spec.offset:spec.offset + spec.size] \
+                .reshape(m_l, spec.lead, spec.rest)
             # shifted quantile: the trim-quantile of active magnitudes equals
             # the 1-(1-trim)·f quantile of the zero-padded row
             q = 1.0 - (1.0 - trim) * fracs_l[:, li]
-            t = _row_quantile(rows, q, trim)
-            cols.append(jnp.sqrt(
-                _rows_trimmed_sq(rows, t, use_kernel, interpret)))
+            _, sq = _rows_trimmed_stats(rows, q, trim, use_kernel, interpret)
+            cols.append(jnp.sqrt(sq))
         return jnp.concatenate(cols, axis=1)
 
     from repro.sharding.cohort import shardable

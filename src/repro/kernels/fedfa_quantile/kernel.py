@@ -1,0 +1,100 @@
+"""Fused trimmed-quantile Pallas kernel for the flat aggregation engine.
+
+One kernel invocation owns a block of (client, segment) rows and computes,
+entirely from VMEM, BOTH outputs of the flat engine's trimmed-norm pass:
+
+  * the per-row quantile threshold t = quantile(|row|, q) with
+    ``jnp.quantile``'s linear interpolation between the two bracketing
+    order statistics, and
+  * the trimmed sum of squares Σ w²·[|w| <= t].
+
+The order statistics are found WITHOUT sorting: for nonnegative f32 values
+the IEEE-754 bit pattern is monotone in the value, so the r-th smallest
+magnitude is located by a 31-step binary search over int32 bit patterns
+(count-and-partition: count entries whose pattern <= mid, narrow the
+bracket).  Every refinement step is a VPU compare+sum over the VMEM-resident
+row block — the row is read from HBM exactly once, versus the top_k path's
+sort + gather + compare + square chain (each its own pass over the data).
+
+Ties need no special casing: counting "<= mid" puts every duplicate of a
+value on the same side of the partition, so the search lands on the exact
+tied value and the trim test ``|w| <= t`` then keeps all of its copies —
+identical to what a sort-based selection yields.
+
+ops.py handles padding (lane alignment, row blocking) and CPU dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Bit pattern of +inf: upper bound of the search bracket and the sentinel
+# for lane-padding columns (never selected — every real magnitude is finite
+# and the bracket collapses onto real data before reaching it).  Plain int:
+# a module-level jnp scalar would be a captured constant in the kernel.
+_INF_BITS = 0x7F800000
+# ceil(log2(2**31)) halvings collapse [0, _INF_BITS] to a single pattern.
+_ITERS = 31
+
+
+def _quantile_fused_kernel(rows_ref, q_ref, t_ref, ss_ref, *, L: int):
+    x = jnp.abs(rows_ref[...].astype(jnp.float32))            # (rb, Lp)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = col < L
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)         # monotone
+    bits = jnp.where(valid, bits, _INF_BITS)
+
+    q = q_ref[...]                                            # (rb, 1)
+    p = q * (L - 1.0)                                         # sort position
+    i0 = jnp.floor(p)
+    frac = p - i0
+    r0 = i0.astype(jnp.int32)                                 # floor rank
+    r1 = jnp.minimum(r0 + 1, L - 1)                           # ceil rank
+
+    def select(rank):
+        """Exact rank-th smallest magnitude per row (0-indexed ascending)."""
+        def body(_, lh):
+            lo, hi = lh
+            mid = lo + (hi - lo) // 2                         # (rb, 1)
+            cnt = jnp.sum((bits <= mid).astype(jnp.int32),
+                          axis=1, keepdims=True)
+            ge = cnt >= rank + 1
+            return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+        lo = jnp.zeros_like(rank)
+        hi = jnp.full_like(rank, _INF_BITS)
+        lo, _ = jax.lax.fori_loop(0, _ITERS, body, (lo, hi))
+        return jax.lax.bitcast_convert_type(lo, jnp.float32)
+
+    v0 = select(r0)
+    v1 = select(r1)
+    t = v0 + (v1 - v0) * frac                                 # (rb, 1)
+    keep = valid & (x <= t)
+    t_ref[...] = t
+    ss_ref[...] = jnp.sum(jnp.where(keep, x * x, 0.0), axis=1, keepdims=True)
+
+
+def quantile_fused(rows: jax.Array, q: jax.Array, *, L: int,
+                   block_rows: int = 8,
+                   interpret: bool = False) -> tuple:
+    """rows: (R, Lp) f32 signed, lane-padded past column L with zeros;
+    q: (R,) quantile levels in [0, 1].  R % block_rows == 0, Lp % 128 == 0.
+    Returns (t, ss) f32 (R,): the |.|-quantile threshold and trimmed Σw²."""
+    R, Lp = rows.shape
+    assert R % block_rows == 0 and Lp % 128 == 0 and 1 <= L <= Lp
+    nb = R // block_rows
+    kernel = functools.partial(_quantile_fused_kernel, L=L)
+    t, ss = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, Lp), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)],
+        interpret=interpret,
+    )(rows, q.reshape(R, 1).astype(jnp.float32))
+    return t[:, 0], ss[:, 0]

@@ -1,0 +1,56 @@
+"""jit'd wrapper for the fused trimmed-quantile kernel (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedfa_quantile import ref
+from repro.kernels.fedfa_quantile.kernel import quantile_fused
+
+_LANES = 128
+_BLOCK_ROWS = 8
+# Per-invocation element budget: the kernel holds the f32 block, its int32
+# bit view and a few same-shaped intermediates in VMEM (~16B/element), so
+# 2^18 elements keeps a block under ~4 MiB of the ~16 MiB/core budget.
+# block_rows shrinks as rows get longer to stay inside it; rows longer than
+# the whole budget fall back to the jnp oracle.  Production-scale leaves
+# past this want a two-stage (histogram, then refine) variant — see the
+# package README.
+_MAX_ROW_ELEMS = 1 << 18
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def row_trimmed_stats(rows: jax.Array, q: jax.Array, *,
+                      use_kernel=None, interpret: bool = False) -> tuple:
+    """Fused per-row (quantile threshold, trimmed Σw²) in ONE pass.
+
+    rows: (R, L) signed values (|.| is taken inside the kernel);
+    q: (R,) quantile levels in [0, 1].  Returns f32 ((R,), (R,)):
+    t[r] = jnp.quantile(|rows[r]|, q[r]) and
+    ss[r] = Σ rows[r]²·[|rows[r]| <= t[r]].
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    R, L = rows.shape
+    if not (use_kernel or interpret) or L > _MAX_ROW_ELEMS:
+        return ref.row_trimmed_stats_ref(rows, q)
+    Lp = ((L + _LANES - 1) // _LANES) * _LANES
+    rb = max(1, min(_BLOCK_ROWS, R, _MAX_ROW_ELEMS // Lp))
+    Rp = ((R + rb - 1) // rb) * rb
+    if Lp == L and Rp == R:
+        rows_p, q_p = rows.astype(jnp.float32), q.astype(jnp.float32)
+    else:
+        # lane pads are masked out in-kernel (any value works); row pads get
+        # q = 1 on zero rows (t = 0, ss = 0) and are sliced off below
+        rows_p = jnp.zeros((Rp, Lp), jnp.float32) \
+            .at[:R, :L].set(rows.astype(jnp.float32))
+        q_p = jnp.ones((Rp,), jnp.float32).at[:R].set(q.astype(jnp.float32))
+    t, ss = quantile_fused(rows_p, q_p, L=L, block_rows=rb,
+                           interpret=interpret or not _on_tpu())
+    return t[:R], ss[:R]

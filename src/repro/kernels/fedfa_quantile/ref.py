@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused trimmed-quantile kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_trimmed_stats_ref(rows, q):
+    """(t, ss) per row: t[r] = jnp.quantile(|rows[r]|, q[r]) and
+    ss[r] = Σ rows[r]²·[|rows[r]| <= t[r]].  rows (R, L), q (R,) -> (R,), (R,)."""
+    a = jnp.abs(rows.astype(jnp.float32))
+    t = jax.vmap(jnp.quantile)(a, q.astype(jnp.float32))
+    ss = jnp.sum(jnp.where(a <= t[:, None], a * a, 0.0), axis=-1)
+    return t, ss

@@ -250,7 +250,9 @@ def main() -> None:
     ap.add_argument("--task", choices=["cls", "lm"], default="cls")
     ap.add_argument("--eval-every", type=int, default=5,
                     help="<=0: evaluate on the final round only")
-    ap.add_argument("--agg-engine", choices=["flat", "tree"], default="flat")
+    ap.add_argument("--agg-engine", choices=["flat", "tree"], default="flat",
+                    help="flat: the production engine; tree: slower "
+                         "test-only differential oracle, kept for debugging")
     ap.add_argument("--driver", choices=["resident", "per-round"],
                     default="resident",
                     help="resident: one jitted round program with donated "

@@ -8,6 +8,9 @@ partitioned over the mesh ``data`` axis, while the (N,) global buffer (and
 the PRNG key) stay replicated.  Local training then runs data-parallel over
 client shards and the fused (M', γ) reductions lower to per-shard partial
 sums plus one ``psum`` (see ``repro.kernels.fedfa_agg.ops.accumulate``).
+The trimmed-norm pass — including the fused Pallas trimmed-quantile kernel
+(``repro.kernels.fedfa_quantile``) — is per-(client, segment) work with no
+collectives, so it runs entirely inside each shard of the same shard_map.
 
 Uneven cohorts (m % n_data_shards != 0) are handled host-side by padding
 the cohort with inert rows: ``n_data = 0`` zeroes a pad row's weight in

@@ -6,7 +6,15 @@ inside the main pytest process): sharded-vs-unsharded resident parity for
 fedfa + heterofl on an UNEVEN m=3 cohort over 4 devices (one pad row,
 ``n_data = 0``) with a malicious client, plus buffer donation under
 NamedSharding.  Prints ``MULTIDEVICE OK`` on success.
+
+With ``--quantile-collectives`` it instead lowers the KERNELIZED flat
+aggregation (fused Pallas trimmed-quantile pass, interpret mode) under the
+4-device mesh and asserts the collective structure is unchanged: zero
+all-gathers and <= 2 N-sized all-reduces (the two (M', γ) psums).  Prints
+``QUANTILE COLLECTIVES OK``.
 """
+import sys
+
 import jax
 import numpy as np
 
@@ -29,6 +37,48 @@ SPECS, data_fn = make_cohort(CFG, M, local_steps=E, malicious_frac=0.34)
 assert any(s.malicious for s in SPECS), "cohort must include an attacker"
 MESH = make_data_mesh()
 assert MESH.shape["data"] == 4
+
+
+if "--quantile-collectives" in sys.argv:
+    import re
+
+    import jax.numpy as jnp
+
+    index = flat.get_index(PARAMS)
+    runtimes = stack_runtimes(CFG, SPECS)
+    pad = csh.pad_rows(M, MESH)
+    (masks, gates, gmaps, nd, _, _), _ = csh.pad_cohort(
+        runtimes, {"d": jnp.zeros((M, 1))}, pad)
+    g = jax.device_put(flat.flatten(index, PARAMS), csh.replicated(MESH))
+    x = jax.device_put(
+        jax.random.normal(KEY, (M + pad, index.n), jnp.float32),
+        csh.cohort_sharding(MESH))
+
+    fn = jax.jit(lambda g, x, nd: flat.aggregate_buffers(
+        index, g, x, CFG, masks, gates, gmaps, nd, graft=True, scale=True,
+        use_kernel=True, interpret=True, mesh=MESH))
+    txt = fn.lower(g, x, nd).compile().as_text()
+
+    n_gather = len(re.findall(r"\sall-gather(?:-start)?\(", txt))
+    assert n_gather == 0, \
+        f"{n_gather} all-gather(s) in the kernelized aggregation"
+    shape_re = re.compile(r"=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+    n_psum = 0
+    for line in txt.splitlines():
+        if " all-reduce(" not in line and " all-reduce-start(" not in line:
+            continue
+        sm = shape_re.search(line)
+        dims = [int(d) for d in sm.group(2).split(",") if d] if sm else []
+        elems = 1
+        for d in dims:
+            elems *= d
+        if elems == index.n:
+            n_psum += 1
+    assert 1 <= n_psum <= 2, \
+        f"expected 1-2 N-sized all-reduces (the (M', γ) psums), got {n_psum}"
+    print(f"collectives: all-gather=0 n-sized-all-reduce={n_psum}")
+    print("QUANTILE COLLECTIVES OK")
+    sys.exit(0)
 
 
 # --- parity: m=3 cohort padded to 4 shards must match the unsharded round

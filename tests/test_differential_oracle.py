@@ -1,0 +1,114 @@
+"""Tree engine as the differential oracle for the flat production engine.
+
+The tree engine (``fedfa.aggregate(engine="tree")``) is no longer on any
+hot path — its job is to be an independently-implemented Alg. 1 that the
+flat engine is diffed against over randomized heterogeneous cohorts: all 7
+strategy presets x random width/depth mixes x malicious flags x random
+(possibly zero) data counts.  Randomization is hypothesis-driven when
+hypothesis is installed and falls back to a fixed seeded sweep otherwise.
+
+The suite carries the ``oracle`` marker so quick runs can deselect it
+(``pytest -m "not oracle"``); it runs by default in tier-1.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fl_round_fixture
+
+from repro.core import fedfa, flat
+from repro.models.masks import ClientArch, stack_masks
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.oracle
+
+CFG, PARAMS = fl_round_fixture()
+_WIDTHS = (0.25, 0.5, 0.75, 1.0)
+SEEDS = range(5)
+
+
+@functools.lru_cache(maxsize=16)
+def _random_cohort(seed: int):
+    """Random hetero cohort: m in [1, 5] clients with random widths, random
+    per-section depths, random malicious (+10 outlier) flags and random data
+    counts including n_data = 0 clients."""
+    rng = np.random.default_rng(seed)
+    bounds = CFG.section_bounds()
+    m = int(rng.integers(1, 6))
+    archs = [ClientArch(float(rng.choice(_WIDTHS)),
+                        tuple(int(rng.integers(1, hi - lo + 1))
+                              for lo, hi in bounds))
+             for _ in range(m)]
+    malicious = rng.random(m) < 0.3
+    nd = rng.integers(0, 5, m).astype(np.float32)
+    if nd.sum() == 0:
+        nd[int(rng.integers(m))] = 3.0
+
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), m)
+    clients = []
+    for i, k in enumerate(ks):
+        c = jax.tree.map(
+            lambda x, kk=k: x + 0.05 * jax.random.normal(
+                kk, x.shape, jnp.float32).astype(x.dtype), PARAMS)
+        if malicious[i]:
+            c = jax.tree.map(lambda x: x + 10.0, c)
+        clients.append(c)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    masks = stack_masks([a.masks(CFG) for a in archs])
+    gates = jnp.stack([a.gates(CFG) for a in archs])
+    gmaps = jnp.stack([a.graft(CFG) for a in archs])
+    return stacked, masks, gates, gmaps, jnp.asarray(nd)
+
+
+def _check_parity(seed: int, strategy: str, rtol=1e-4, atol=1e-5):
+    stacked, masks, gates, gmaps, nd = _random_cohort(seed)
+    kw = fedfa.STRATEGIES[strategy]
+    out_tree = fedfa.aggregate(PARAMS, stacked, CFG, masks, gates, gmaps,
+                               nd, engine="tree", **kw)
+    out_flat = fedfa.aggregate(PARAMS, stacked, CFG, masks, gates, gmaps,
+                               nd, engine="flat", **kw)
+    for x, y in zip(jax.tree.leaves(out_tree), jax.tree.leaves(out_flat)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("strategy", sorted(fedfa.STRATEGIES))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_flat_matches_tree_oracle(seed, strategy):
+    """Flat == tree on random hetero cohorts for every strategy preset."""
+    _check_parity(seed, strategy)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           strategy=st.sampled_from(sorted(fedfa.STRATEGIES)))
+    def test_flat_matches_tree_oracle_hypothesis(seed, strategy):
+        """Hypothesis-driven sweep over the same cohort space."""
+        _check_parity(seed, strategy)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_kernelized_cohort_norms_match_reference(seed):
+    """The fused Pallas trimmed-norm pass (use_kernel=True, interpret=True:
+    the TPU code path on CPU) is bit-tolerant-equal (<= 1e-5 rel) to the
+    jnp reference path on differential-oracle cohorts."""
+    stacked, masks, _, _, _ = _random_cohort(seed)
+    index = flat.get_index(PARAMS)
+    dens, fracs = jax.vmap(
+        functools.partial(flat._density_and_fraction, CFG, index))(masks)
+    xm = flat.flatten_stacked(index, stacked) * dens
+    ref = flat._cohort_norms(index, xm, fracs, 0.95, False, False)
+    ker = flat._cohort_norms(index, xm, fracs, 0.95, True, True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-7)

@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels.fedfa_agg import ops as agg_ops
 from repro.kernels.fedfa_agg import ref as agg_ref
+from repro.kernels.fedfa_quantile import ops as quant_ops
+from repro.kernels.fedfa_quantile import ref as quant_ref
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ops import attention as fa_attention
@@ -152,3 +154,99 @@ def test_scaled_accum_all_masked_segment():
                              interpret=True)
     assert float(jnp.abs(out).max()) == 0.0
     assert not bool(jnp.isnan(out).any())
+
+
+# Fused trimmed-quantile kernel (repro.kernels.fedfa_quantile): interpret
+# mode = the TPU count-and-partition code path executed on CPU, against the
+# pure-jnp jnp.quantile oracle.
+
+def _quant_check(rows, q, rtol=1e-6, atol=1e-7):
+    tk, sk = quant_ops.row_trimmed_stats(rows, q, use_kernel=True,
+                                         interpret=True)
+    tr, sr = quant_ref.row_trimmed_stats_ref(rows, q)
+    np.testing.assert_allclose(np.asarray(tk), np.asarray(tr),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr),
+                               rtol=rtol, atol=atol)
+    return tk, sk
+
+
+@pytest.mark.parametrize("R,L", [
+    (1, 130),      # single row (m=1 cohort)
+    (3, 1),        # L=1 segments (scalar leaves)
+    (5, 127),      # ragged: below one 128-lane tile
+    (7, 129),      # ragged: one tile + 1
+    (8, 384),      # aligned rows and lanes (no-pad fast path)
+    (2, 1000),     # ragged, multi-tile
+])
+def test_quantile_fused_ragged_sweep(R, L):
+    """Ragged segment lengths: lane padding must not perturb threshold or
+    trimmed sum (pad columns are masked out in-kernel)."""
+    k = jax.random.PRNGKey(R * 1000 + L)
+    rows = jax.random.normal(k, (R, L))
+    q = jax.random.uniform(jax.random.fold_in(k, 1), (R,), minval=0.95,
+                           maxval=1.0)
+    _quant_check(rows, q)
+
+
+def test_quantile_fused_q_endpoints():
+    """q=1 (f→0, all-inactive leaf) selects the row max; q=trim (f=1) the
+    plain trim quantile; q=0 the row min."""
+    rows = jax.random.normal(jax.random.PRNGKey(0), (4, 257))
+    for qv in (1.0, 0.95, 0.0):
+        t, _ = _quant_check(rows, jnp.full((4,), qv))
+    t1, s1 = quant_ops.row_trimmed_stats(rows, jnp.ones((4,)),
+                                         use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(t1),
+                                  np.asarray(jnp.abs(rows).max(axis=1)))
+    np.testing.assert_allclose(np.asarray(s1),
+                               np.asarray(jnp.sum(rows * rows, axis=1)),
+                               rtol=1e-6)
+
+
+def test_quantile_fused_all_masked_rows():
+    """All-masked rows (every weight zeroed): t = 0 and Σ = 0, never NaN."""
+    rows = jnp.zeros((5, 300))
+    t, ss = quant_ops.row_trimmed_stats(rows, jnp.ones((5,)),
+                                        use_kernel=True, interpret=True)
+    assert float(jnp.abs(t).max()) == 0.0 and float(jnp.abs(ss).max()) == 0.0
+    assert not bool(jnp.isnan(t).any() or jnp.isnan(ss).any())
+
+
+def test_quantile_fused_threshold_on_tied_value():
+    """A rank landing exactly on a run of ties must select the tied value
+    itself and the trim test must keep every copy."""
+    row = jnp.asarray([[1.0, 2.0, 2.0, 2.0, 3.0]])
+    # p = 0.5 * 4 = 2 -> sorted[2] = 2.0 exactly, no interpolation
+    t, ss = quant_ops.row_trimmed_stats(row, jnp.asarray([0.5]),
+                                        use_kernel=True, interpret=True)
+    assert float(t[0]) == 2.0
+    assert float(ss[0]) == 1.0 + 3 * 4.0          # all three 2.0s kept
+    _quant_check(row, jnp.asarray([0.5]))
+    # interpolated position inside the tie run: t stays exactly 2.0
+    t2, _ = quant_ops.row_trimmed_stats(row, jnp.asarray([0.375]),
+                                        use_kernel=True, interpret=True)
+    assert float(t2[0]) == 2.0
+
+
+def test_quantile_fused_selection_is_bit_exact():
+    """Integer sort positions (frac = 0): the count-and-partition search
+    must return the sorted element bit-for-bit, not an approximation."""
+    L = 129                                        # q = k/128 exact in f32
+    rows = jax.random.normal(jax.random.PRNGKey(3), (4, L))
+    srt = jnp.sort(jnp.abs(rows), axis=1)
+    for k in (0, 1, 64, 127, 128):
+        q = jnp.full((4,), k / 128.0, jnp.float32)
+        t, _ = quant_ops.row_trimmed_stats(rows, q, use_kernel=True,
+                                           interpret=True)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(srt[:, k]))
+
+
+def test_quantile_fused_bf16_cast_rows():
+    """Rows that round-tripped through bf16 (heavy value ties at bf16
+    resolution) still match the oracle exactly."""
+    rows = jax.random.normal(jax.random.PRNGKey(4), (6, 500))
+    rows = rows.astype(jnp.bfloat16).astype(jnp.float32)
+    q = jax.random.uniform(jax.random.PRNGKey(5), (6,), minval=0.95,
+                           maxval=1.0)
+    _quant_check(rows, q)

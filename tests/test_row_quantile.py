@@ -1,0 +1,107 @@
+"""Property tests for the flat engine's exact tail quantile
+(``flat._row_quantile``) against ``jnp.quantile`` at the edges the
+top-(1-trim) tail trick could miss: endpoint quantile levels (f→0 and f=1
+active fractions), L=1 rows, trim values where the tail size k clamps to
+the full row, and bf16-cast rows (heavy ties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flat
+
+
+def _ref_quantile(rows_abs, q):
+    """vmapped jnp.quantile: (m, R, L) rows + per-client q (m,) -> (m, R)."""
+    return jax.vmap(lambda r, qq: jnp.quantile(r, qq, axis=-1))(rows_abs, q)
+
+
+def _rows(m, R, L, seed=0):
+    return jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (m, R, L)))
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("m,R,L", [(3, 2, 57), (2, 5, 260), (1, 1, 33)])
+def test_row_quantile_matches_jnp_interior(seed, m, R, L):
+    """Random shifted levels q in [trim, 1] — the production regime."""
+    trim = 0.95
+    rows = _rows(m, R, L, seed)
+    q = jax.random.uniform(jax.random.PRNGKey(seed + 100), (m,),
+                           minval=trim, maxval=1.0)
+    np.testing.assert_allclose(
+        np.asarray(flat._row_quantile(rows, q, trim)),
+        np.asarray(_ref_quantile(rows, q)), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("L", [1, 2, 50, 129])
+def test_row_quantile_endpoint_q_one(L):
+    """f→0 (all-inactive leaf) shifts the level to q=1: the row max, even
+    though the interpolation indices sit at the very end of the tail."""
+    rows = _rows(2, 3, L, seed=L)
+    q = jnp.ones((2,))
+    np.testing.assert_array_equal(
+        np.asarray(flat._row_quantile(rows, q, 0.95)),
+        np.asarray(rows.max(axis=-1)))
+
+
+@pytest.mark.parametrize("trim", [0.95, 0.5])
+def test_row_quantile_endpoint_q_trim(trim):
+    """f=1 (fully active leaf) keeps q=trim — the lowest level the tail
+    trick supports; the floor index is the deepest element the k-tail holds."""
+    rows = _rows(3, 2, 101, seed=7)
+    q = jnp.full((3,), trim)
+    np.testing.assert_allclose(
+        np.asarray(flat._row_quantile(rows, q, trim)),
+        np.asarray(_ref_quantile(rows, q)), rtol=1e-6, atol=1e-7)
+
+
+def test_row_quantile_single_element_rows():
+    """L=1 (scalar leaves): every level returns the single element."""
+    rows = _rows(4, 3, 1, seed=1)
+    for qv in (0.95, 0.97, 1.0):
+        np.testing.assert_array_equal(
+            np.asarray(flat._row_quantile(rows, jnp.full((4,), qv), 0.95)),
+            np.asarray(rows[..., 0]))
+
+
+@pytest.mark.parametrize("L", [1, 2, 3])
+def test_row_quantile_k_clamps_to_L(L):
+    """Small rows where k = ceil((1-trim)(L-1))+2 >= L clamps to the full
+    row: the 'tail' is the whole row and any q in [trim, 1] must be exact."""
+    trim = 0.95
+    assert min(L, int(np.ceil((1 - trim) * (L - 1))) + 2) == L
+    rows = _rows(2, 4, L, seed=L + 10)
+    q = jax.random.uniform(jax.random.PRNGKey(L), (2,), minval=trim,
+                           maxval=1.0)
+    np.testing.assert_allclose(
+        np.asarray(flat._row_quantile(rows, q, trim)),
+        np.asarray(_ref_quantile(rows, q)), rtol=1e-6, atol=1e-7)
+
+
+def test_row_quantile_trim_zero_full_sort_regime():
+    """trim=0 degenerates the tail to a full top_k: arbitrary q in [0, 1]
+    must match jnp.quantile (k clamps to L for any L)."""
+    rows = _rows(3, 2, 40, seed=2)
+    q = jnp.asarray([0.0, 0.31, 1.0])
+    np.testing.assert_allclose(
+        np.asarray(flat._row_quantile(rows, q, 0.0)),
+        np.asarray(_ref_quantile(rows, q)), rtol=1e-6, atol=1e-7)
+
+
+def test_row_quantile_bf16_cast_rows():
+    """bf16-cast rows tie heavily at bf16 resolution; the tail selection
+    must still agree with the full-sort reference."""
+    rows = _rows(3, 2, 300, seed=3).astype(jnp.bfloat16).astype(jnp.float32)
+    q = jax.random.uniform(jax.random.PRNGKey(9), (3,), minval=0.95,
+                           maxval=1.0)
+    np.testing.assert_allclose(
+        np.asarray(flat._row_quantile(rows, q, 0.95)),
+        np.asarray(_ref_quantile(rows, q)), rtol=1e-6, atol=1e-7)
+
+
+def test_row_quantile_all_zero_rows():
+    """All-inactive (fully masked) leaves: zero rows give a zero threshold
+    at every level, so the trimmed norm is 0 rather than NaN."""
+    rows = jnp.zeros((2, 3, 64))
+    out = flat._row_quantile(rows, jnp.asarray([0.95, 1.0]), 0.95)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)

@@ -131,10 +131,9 @@ def test_pad_cohort_rows():
     np.testing.assert_array_equal(np.asarray(mal_p), [0.0, 1.0, 0.0, 0.0])
 
 
-def test_sharded_round_forced_multidevice():
-    """Sharded-vs-unsharded parity on 4 forced CPU devices — uneven m=3
-    cohort (one pad shard), malicious client, fedfa + heterofl, donation —
-    in a subprocess because XLA_FLAGS is read once at jax init."""
+def _run_forced_multidevice_child(*args):
+    """Run tests/_force_multidevice_child.py on 4 forced CPU devices — in a
+    subprocess because XLA_FLAGS is read once at jax init."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -144,10 +143,24 @@ def test_sharded_round_forced_multidevice():
         ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     proc = subprocess.run(
         [sys.executable,
-         os.path.join(root, "tests", "_force_multidevice_child.py")],
+         os.path.join(root, "tests", "_force_multidevice_child.py"), *args],
         env=env, capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, f"child failed:\n{proc.stdout}\n{proc.stderr}"
-    assert "MULTIDEVICE OK" in proc.stdout
+    return proc.stdout
+
+
+def test_sharded_round_forced_multidevice():
+    """Sharded-vs-unsharded parity on 4 forced CPU devices — uneven m=3
+    cohort (one pad shard), malicious client, fedfa + heterofl, donation."""
+    assert "MULTIDEVICE OK" in _run_forced_multidevice_child()
+
+
+def test_kernelized_quantile_collectives_forced_multidevice():
+    """The kernelized trimmed-norm pass (fused Pallas fedfa_quantile,
+    interpret mode) keeps the sharded aggregation's collective structure:
+    zero all-gathers, <= 2 N-sized all-reduces under the host mesh."""
+    out = _run_forced_multidevice_child("--quantile-collectives")
+    assert "QUANTILE COLLECTIVES OK" in out
 
 
 # ---------------------------------------------------------------------------
