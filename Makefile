@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check bench-round bench-aggregate bench-shard bench-quantile
+.PHONY: tier1 check bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
@@ -15,9 +15,14 @@ bench-round:      ## resident vs per-round driver, m in {4,16,64} -> BENCH_round
 bench-aggregate:  ## flat vs tree aggregation engines -> BENCH_aggregate.json
 	$(PY) benchmarks/bench_aggregate.py
 
-bench-shard:      ## sharded vs unsharded resident round on 4 forced CPU devices -> BENCH_shard.json
+bench-shard:      ## sharded vs unsharded resident round (data-only + 2x2 meshes) on 4 forced CPU devices -> BENCH_shard.json
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
-		$(PY) benchmarks/bench_shard.py
+		$(PY) benchmarks/bench_shard.py --model-shards 1 2
+
+bench-shard-2d:   ## 2x2 (data, model) mesh only: reduce-scattered aggregation -> results/BENCH_shard_2d.json
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+		$(PY) benchmarks/bench_shard.py --model-shards 2 \
+		--out results/BENCH_shard_2d.json
 
 bench-quantile:   ## fused trimmed-quantile kernel vs top_k path (4 forced CPU devices) -> BENCH_quantile.json
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \

@@ -138,21 +138,19 @@ def _wall(index, xm, fracs, iters, use_kernel, interpret):
 
 def _collectives(index, xm, fracs, mesh):
     """Lower + compile the kernelized pass under the mesh; count collectives."""
-    import re
     import jax
     from repro.core import flat
     from repro.sharding import cohort as csh
+    from repro.sharding import collectives as coll
 
     fn = jax.jit(lambda x, f: flat._cohort_norms(
         index, x, f, 0.95, True, True, mesh=mesh))
     x = jax.device_put(xm, csh.cohort_sharding(mesh))
     fr = jax.device_put(fracs, csh.cohort_sharding(mesh))
     txt = fn.lower(x, fr).compile().as_text()
-    counts = {}
-    for kind in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
-        counts[kind] = len(re.findall(
-            rf"\s{kind}(?:-start)?\(", txt))
-    return counts
+    return {kind: coll.count(txt, kind)
+            for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all")}
 
 
 def main() -> None:

@@ -1,27 +1,35 @@
-"""Sharded resident-round benchmark: cohort axis over the mesh ``data`` axis.
+"""Sharded resident-round benchmark: client axis over ``data``, parameter
+axis over ``model``.
 
-Times the resident driver (``repro.core.round``) with and without a mesh
-(``repro.launch.mesh.make_data_mesh`` — every local device on the data
-axis) and inspects the lowered HLO of the sharded round program:
+Times the resident driver (``repro.core.round``) without a mesh and under
+one mesh per requested ``--model-shards`` value (1 -> the PR 3 data-only
+mesh with every local device on ``data``; k > 1 -> a real 2-D
+(n_dev/k, k) ``(data, model)`` mesh), and inspects the lowered HLO:
 
   * on a single-device host the mesh degenerates to 1x1 and the sharded
     program must not regress against the unsharded resident round,
   * on a multi-device backend (``XLA_FLAGS=--xla_force_host_platform_
     device_count=K`` on CPU — the CI configuration — or a real TPU slice)
-    the collective counts make the sharding inspectable: the (M', γ)
-    accumulation must lower to per-shard partial sums + one all-reduce per
-    fused reduction, with NO all-gather materializing the (m, N) cohort.
+    the collective counts make the sharding inspectable.  The aggregation
+    path (``flat.aggregate_buffers`` lowered standalone on the round's own
+    shardings) must show ZERO all-gathers; with model shards the (M', γ)
+    reductions must lower to reduce-scatters with no all-reduce above
+    N/n_model elements (per-device volume ~N/n_model), and the full round
+    may all-gather only the global-model broadcast (<= N elements), never
+    cohort-scale data.  Per-device resident-buffer bytes (g_buf N/n_model,
+    c_buf (m/D)·(N/n_model), f32) are recorded alongside the counts.
 
-Emits ``BENCH_shard.json`` — the sharding trajectory anchor.
+Emits ``BENCH_shard.json`` — the sharding trajectory anchor (see its
+``schema_notes`` for the gated invariant).
 
-  PYTHONPATH=src python benchmarks/bench_shard.py [--smoke] [--min-ratio X]
+  PYTHONPATH=src python benchmarks/bench_shard.py [--smoke] \
+      [--model-shards K ...] [--min-ratio X]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import re
 import sys
 from collections import Counter
 
@@ -30,24 +38,38 @@ try:
 except ImportError:                      # run as a script from benchmarks/
     from bench_round import _setup, _time_resident
 
+SCHEMA_NOTES = (
+    "Gated collective-structure invariant per (m, ms) run: "
+    "agg_collectives (flat.aggregate_buffers lowered standalone on the "
+    "round's shardings) must have all_gathers == 0 always; with "
+    "model_shards > 1 it must have reduce_scatters >= 1 and every "
+    "N-scale all-reduce exactly n_padded/model_shards elements "
+    "(per-device all-reduce volume ~N/n_model); with model_shards == 1 "
+    "it keeps PR 3's 1-2 N-sized psums.  The full round "
+    "('collectives') must never all-gather the full (m, N) cohort: "
+    "full_cohort_all_gathers == 0.  max_all_gather_elems is "
+    "informational — mostly the <= N global-model broadcast into local "
+    "training, though GSPMD may re-layout training intermediates over "
+    "the idle model axis.  per_device_bytes records the RESIDENT "
+    "buffer footprint (f32): g_buf = n_padded/model_shards, "
+    "c_buf = (m_padded/data_shards)*(n_padded/model_shards)."
+)
 
-def _collectives(cfg, fl, params, specs, batches, mesh):
-    """Lower + compile the sharded round program and count its collectives.
+def _mesh_inputs(cfg, fl, params, specs, batches, mesh, *,
+                 with_scratch=False):
+    """The padded (index, runtime, buffer) set the sharded round sees.
 
-    Returns (counts, full_cohort_gathers, psum_reduces): ``counts`` is a
-    dict of collective-op line counts, ``full_cohort_gathers`` the number of
-    all-gathers whose result is the full (m, N) cohort (must be 0), and
-    ``psum_reduces`` the number of all-reduces of exactly N elements — the
-    fused (M', γ) partial-sum reductions.
-    """
+    The (mp, n_padded) zero cohort scratch ``c`` is only materialized when
+    ``with_scratch`` is set (the round lowering needs it as a donated
+    argument; the standalone aggregation lowering does not) — at m=64 it is
+    a ~600MB device buffer."""
     import jax
     import jax.numpy as jnp
     from repro.core import flat
-    from repro.core.round import make_flat_round
     from repro.core.server import default_class_masks, stack_runtimes
     from repro.sharding import cohort as csh
 
-    index = flat.get_index(params)
+    index = flat.get_index(params, pad_to=csh.model_shards(mesh))
     runtimes = stack_runtimes(cfg, specs)
     m = len(specs)
     pad = csh.pad_rows(m, mesh)
@@ -56,39 +78,80 @@ def _collectives(cfg, fl, params, specs, batches, mesh):
         runtimes, batches, pad)
     mp = m + pad
     cms_in = default_class_masks(cms, cfg, fl, mp)
+    g = jax.device_put(flat.flatten(index, params), csh.global_sharding(mesh))
+    c = None
+    if with_scratch:
+        c = jax.device_put(jnp.zeros((mp, index.n_padded), jnp.float32),
+                           csh.cohort_buffer_sharding(mesh))
+    return (index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal, bpad),
+            g, c)
+
+
+def _collectives(cfg, fl, params, specs, batches, mesh):
+    """Lower + compile the sharded ROUND program and count its collectives.
+
+    Returns (counts, full_cohort_gathers, psum_reduces, max_gather_elems):
+    ``counts`` is a dict of collective-op line counts,
+    ``full_cohort_gathers`` the number of all-gathers whose result is the
+    full (m, N) cohort (must be 0), ``psum_reduces`` the number of
+    all-reduces of exactly n_padded elements — the fused (M', γ)
+    partial-sum reductions of the data-only layout — and
+    ``max_gather_elems`` the largest all-gather result (with model shards
+    this must stay <= n_padded: the global-model broadcast).
+    """
+    import jax
+    from repro.core.round import make_flat_round
+    from repro.sharding import collectives as coll
+
+    (index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal, bpad),
+     g, c) = _mesh_inputs(cfg, fl, params, specs, batches, mesh,
+                          with_scratch=True)
     fn = make_flat_round(cfg, fl, index, any_malicious=False, mesh=mesh,
                          m_real=m_real)
-    g = jax.device_put(flat.flatten(index, params), csh.replicated(mesh))
-    c = jax.device_put(jnp.zeros((mp, index.n), jnp.float32),
-                       csh.cohort_sharding(mesh))
+    keys = jax.random.split(jax.random.PRNGKey(0), mp)
     txt = fn.lower(g, c, masks, gates, gmaps, nd, cms_in, mal, bpad,
-                   jax.random.PRNGKey(0)).compile().as_text()
+                   keys).compile().as_text()
 
-    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-             "collective-permute")
     counts = Counter()
-    full_gathers = psums = 0
-    shape_re = re.compile(r'=\s*\(?([a-z0-9]+)\[([\d,]*)\]')
-    for line in txt.splitlines():
-        for kind in kinds:
-            # sync ops lower as " all-reduce(...)"; TPU/GPU backends often
-            # emit async pairs — count the "-start(" half (which carries the
-            # shape), never the "-done(" half, so each op counts once
-            if f" {kind}(" not in line and f" {kind}-start(" not in line:
-                continue
-            counts[kind] += 1
-            sm = shape_re.search(line)
-            if sm is None:
-                continue
-            dims = [int(d) for d in sm.group(2).split(",") if d]
-            elems = 1
-            for d in dims:
-                elems *= d
-            if kind == "all-gather" and elems >= mp * index.n:
+    full_gathers = psums = max_gather = 0
+    for kind, elems in coll.collective_lines(txt):
+        counts[kind] += 1
+        if elems is None:
+            continue
+        if kind == "all-gather":
+            max_gather = max(max_gather, elems)
+            if elems >= mp * index.n_padded:
                 full_gathers += 1
-            if kind == "all-reduce" and elems == index.n:
-                psums += 1
-    return dict(counts), full_gathers, psums
+        if kind == "all-reduce" and elems == index.n_padded:
+            psums += 1
+    return dict(counts), full_gathers, psums, max_gather
+
+
+def _agg_collectives(cfg, fl, params, specs, batches, mesh):
+    """Lower the AGGREGATION path standalone (the round's own shardings:
+    g over ``model``, x over ``data`` pre-split) and count its collectives.
+
+    Returns (all_gathers, reduce_scatters, big_allreduce_sizes) where the
+    sizes list every all-reduce of >= n_padded/model_shards elements —
+    with model shards these must all be exactly n_padded/model_shards.
+    """
+    import jax
+    from repro.core import flat
+    from repro.sharding import cohort as csh
+    from repro.sharding import collectives as coll
+
+    (index, _, mp, (masks, gates, gmaps, nd, _, _, _), g, _) = _mesh_inputs(
+        cfg, fl, params, specs, batches, mesh)
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(1), (mp, index.n_padded),
+                          jax.numpy.float32), csh.cohort_sharding(mesh))
+    fn = jax.jit(lambda g, x, nd: flat.aggregate_buffers(
+        index, g, x, cfg, masks, gates, gmaps, nd, graft=True, scale=True,
+        mesh=mesh), out_shardings=csh.global_sharding(mesh))
+    txt = fn.lower(g, x, nd).compile().as_text()
+    scale = index.n_padded // csh.model_shards(mesh)
+    return (coll.count(txt, "all-gather"), coll.count(txt, "reduce-scatter"),
+            coll.sizes(txt, "all-reduce", min_elems=scale))
 
 
 def main() -> None:
@@ -98,6 +161,11 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--model-shards", nargs="+", type=int, default=[1],
+                    help="model-axis shard counts to bench; 1 = the PR 3 "
+                         "data-only mesh, k > 1 = a (n_dev/k, k) "
+                         "(data, model) mesh with reduce-scattered "
+                         "aggregation and N/k resident slices per device")
     ap.add_argument("--smoke", action="store_true",
                     help="m=4 only, 3 rounds — the tier-1 CI configuration")
     ap.add_argument("--min-ratio", type=float, default=None,
@@ -116,20 +184,35 @@ def main() -> None:
             else "BENCH_shard.json"
 
     import jax
-    from repro.launch.mesh import make_data_mesh
+    from repro.launch.mesh import make_data_mesh, make_mesh_2d
+    from repro.sharding import cohort as csh
 
     n_dev = jax.device_count()
-    mesh = make_data_mesh()
+    meshes = {}
+    for ms in dict.fromkeys(args.model_shards):
+        if n_dev % ms != 0:
+            print(f"SKIP model-shards={ms}: {n_dev} devices not divisible")
+            continue
+        meshes[ms] = make_data_mesh() if ms == 1 \
+            else make_mesh_2d(n_dev // ms, ms)
+    if not meshes:
+        print(f"no runnable mesh for --model-shards {args.model_shards} on "
+              f"{n_dev} device(s)")
+        sys.exit(1)
     min_ratio = args.min_ratio
     if min_ratio is None and n_dev == 1:
         # 1x1 mesh: sharding annotations must be ~free on the host path
         min_ratio = 0.75
 
     results = {"backend": jax.default_backend(), "n_devices": n_dev,
-               "mesh": {ax: int(s) for ax, s in mesh.shape.items()},
+               "model_shards": sorted(meshes),
+               "meshes": {f"ms{ms}": {ax: int(s)
+                                      for ax, s in mesh.shape.items()}
+                          for ms, mesh in meshes.items()},
                "config": {"rounds": args.rounds,
                           "local_steps": args.local_steps,
                           "batch": args.batch, "seq_len": args.seq_len},
+               "schema_notes": SCHEMA_NOTES,
                "runs": {}}
     ok = True
     for m in args.cohorts:
@@ -137,47 +220,94 @@ def main() -> None:
             m, args.local_steps, args.batch, args.seq_len)
         dt_un = _time_resident(cfg, fl, params, specs, batches, args.rounds,
                                mesh=None)
-        dt_sh = _time_resident(cfg, fl, params, specs, batches, args.rounds,
-                               mesh=mesh)
-        counts, full_gathers, psums = _collectives(
-            cfg, fl, params, specs, batches, mesh)
-        ratio = dt_un / max(dt_sh, 1e-9)
-        rec = {
-            "unsharded": {"mean_s": round(dt_un / args.rounds, 5),
-                          "rounds_per_s": round(args.rounds / dt_un, 3)},
-            "sharded": {"mean_s": round(dt_sh / args.rounds, 5),
-                        "rounds_per_s": round(args.rounds / dt_sh, 3)},
-            "sharded_over_unsharded": round(ratio, 3),
-            "collectives": counts,
-            "full_cohort_all_gathers": full_gathers,
-            "n_psum_reduces": psums,
-        }
+        rec = {"unsharded": {"mean_s": round(dt_un / args.rounds, 5),
+                             "rounds_per_s": round(args.rounds / dt_un, 3)}}
         results["runs"][f"m{m}"] = rec
-        print(f"m={m:3d}  unsharded {rec['unsharded']['rounds_per_s']:7.2f} "
-              f"r/s  sharded {rec['sharded']['rounds_per_s']:7.2f} r/s  "
-              f"ratio {ratio:.2f}x  collectives {counts}", flush=True)
-        if full_gathers:
-            print(f"FAIL: {full_gathers} all-gather(s) materialize the full "
-                  f"(m, N) cohort at m={m}", flush=True)
-            ok = False
-        if n_dev > 1 and counts.get("all-gather", 0) > 0:
-            # the round has no legitimate all-gather at all today; a nonzero
-            # count means cohort data is being re-replicated somewhere (the
-            # leaf-by-leaf top_k re-gather is each smaller than m*N, so the
-            # full-cohort check alone would miss it)
-            print(f"FAIL: {counts['all-gather']} all-gather(s) in the "
-                  f"sharded round at m={m} — cohort data is being "
-                  f"re-replicated", flush=True)
-            ok = False
-        if n_dev > 1 and psums < 1:
-            print(f"FAIL: no N-sized all-reduce in the sharded round at "
-                  f"m={m} — the (M', γ) reduction is not a per-shard "
-                  f"partial sum + psum", flush=True)
-            ok = False
-        if min_ratio is not None and ratio < min_ratio:
-            print(f"FAIL: sharded/unsharded ratio {ratio:.2f} < required "
-                  f"{min_ratio:.2f} at m={m}", flush=True)
-            ok = False
+        for ms, mesh in meshes.items():
+            dt_sh = _time_resident(cfg, fl, params, specs, batches,
+                                   args.rounds, mesh=mesh)
+            counts, full_gathers, psums, max_gather = _collectives(
+                cfg, fl, params, specs, batches, mesh)
+            n_ag, n_rs, big_ars = _agg_collectives(
+                cfg, fl, params, specs, batches, mesh)
+            from repro.core import flat
+            index = flat.get_index(params, pad_to=ms)
+            d_sh = csh.data_shards(mesh)
+            mp = m + csh.pad_rows(m, mesh)
+            ratio = dt_un / max(dt_sh, 1e-9)
+            sub = {
+                "mean_s": round(dt_sh / args.rounds, 5),
+                "rounds_per_s": round(args.rounds / dt_sh, 3),
+                "sharded_over_unsharded": round(ratio, 3),
+                "collectives": counts,
+                "full_cohort_all_gathers": full_gathers,
+                "n_psum_reduces": psums,
+                "max_all_gather_elems": max_gather,
+                "agg_collectives": {"all_gathers": n_ag,
+                                    "reduce_scatters": n_rs,
+                                    "big_all_reduce_elems": big_ars},
+                "per_device_bytes": {
+                    "g_buf": index.n_padded // ms * 4,
+                    "c_buf": (mp // d_sh) * (index.n_padded // ms) * 4,
+                },
+                "n_padded": index.n_padded,
+            }
+            rec[f"ms{ms}"] = sub
+            print(f"m={m:3d} ms={ms}  unsharded "
+                  f"{rec['unsharded']['rounds_per_s']:7.2f} r/s  sharded "
+                  f"{sub['rounds_per_s']:7.2f} r/s  ratio {ratio:.2f}x  "
+                  f"agg[ag={n_ag} rs={n_rs} ar={big_ars}]  "
+                  f"collectives {counts}", flush=True)
+            if full_gathers:
+                print(f"FAIL: {full_gathers} all-gather(s) materialize the "
+                      f"full (m, N) cohort at m={m} ms={ms}", flush=True)
+                ok = False
+            if n_ag:
+                print(f"FAIL: {n_ag} all-gather(s) in the aggregation path "
+                      f"at m={m} ms={ms}", flush=True)
+                ok = False
+            if ms == 1 and n_dev > 1 and counts.get("all-gather", 0) > 0:
+                # the data-only round has no legitimate all-gather at all; a
+                # nonzero count means cohort data is being re-replicated
+                # (the leaf-by-leaf top_k re-gather is each smaller than
+                # m*N, so the full-cohort check alone would miss it)
+                print(f"FAIL: {counts['all-gather']} all-gather(s) in the "
+                      f"data-only sharded round at m={m} — cohort data is "
+                      f"being re-replicated", flush=True)
+                ok = False
+            if ms == 1 and n_dev > 1 and psums < 1:
+                print(f"FAIL: no N-sized all-reduce in the sharded round at "
+                      f"m={m} — the (M', γ) reduction is not a per-shard "
+                      f"partial sum + psum", flush=True)
+                ok = False
+            if ms > 1 and n_dev > 1:
+                half = index.n_padded // ms
+                if n_rs < 1:
+                    print(f"FAIL: no reduce-scatter in the 2-D aggregation "
+                          f"path at m={m} ms={ms}", flush=True)
+                    ok = False
+                if any(e != half for e in big_ars):
+                    print(f"FAIL: all-reduce volume above N/n_model at "
+                          f"m={m} ms={ms}: {big_ars} (N/{ms} = {half})",
+                          flush=True)
+                    ok = False
+                if max_gather > index.n_padded:
+                    # GSPMD may re-layout TRAINING intermediates over the
+                    # idle model axis (observed: a ~2-cohort-row gather at
+                    # m=16); the gated invariant is the aggregation path
+                    # (all_gathers == 0 above) + no FULL-cohort gather, so
+                    # this is recorded but informational
+                    print(f"note: training-side all-gather of "
+                          f"{max_gather} elems (> N = {index.n_padded}) "
+                          f"in the 2-D round at m={m} ms={ms}", flush=True)
+            if min_ratio is not None and ms == 1 and ratio < min_ratio:
+                # wall-clock is gated on the data-only mesh only: 2-D CPU
+                # ratios are noisy/slow by construction (the gated 2-D
+                # signal is the collective structure above)
+                print(f"FAIL: sharded/unsharded ratio {ratio:.2f} < "
+                      f"required {min_ratio:.2f} at m={m} ms={ms}",
+                      flush=True)
+                ok = False
 
     out = args.out if os.path.isabs(args.out) else os.path.normpath(
         os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",

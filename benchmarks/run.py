@@ -142,6 +142,13 @@ def check() -> None:
         ("sharded-round smoke bench (4 forced CPU devices)",
          [sys.executable, os.path.join(root, "benchmarks", "bench_shard.py"),
           "--smoke"], shard_env),
+        # 2x2 (data, model) smoke: reduce-scattered aggregation — gates
+        # 0 all-gathers in the aggregation path, >= 1 reduce-scatter, and
+        # per-device all-reduce volume N/n_model
+        ("2-D sharded-round smoke bench (2x2 on 4 forced CPU devices)",
+         [sys.executable, os.path.join(root, "benchmarks", "bench_shard.py"),
+          "--smoke", "--model-shards", "2",
+          "--out", "results/BENCH_shard_2d_smoke.json"], shard_env),
         ("quantile-path smoke bench (4 forced CPU devices)",
          [sys.executable,
           os.path.join(root, "benchmarks", "bench_quantile.py"),

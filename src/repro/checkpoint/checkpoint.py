@@ -29,22 +29,39 @@ def save_from_buffer(path: str, index, buf, meta: Dict[str, Any] | None = None) 
 
     The (N,) f32 buffer is unflattened back to the original leaf dtypes only
     here, at the eval/checkpoint boundary — the training loop itself never
-    leaves flat space.  ``index`` is the ``flat.FlatIndex`` the buffer was
-    packed with; checkpoints written this way are byte-compatible with
-    ``save``/``restore`` on the equivalent pytree.
+    leaves flat space.  A model-sharded buffer (global P("model") layout,
+    ``repro.sharding.cohort.global_sharding``) is explicitly gathered to
+    host first — the one place the full global model is materialized.
+    ``index`` is the ``flat.FlatIndex`` the buffer was packed with;
+    checkpoints written this way are byte-compatible with
+    ``save``/``restore`` on the equivalent pytree (the inert pad tail, if
+    any, is dropped by the unflatten).
     """
     from repro.core import flat
+    if isinstance(buf, jax.Array):
+        buf = np.asarray(jax.device_get(buf))    # gathers sharded buffers
     save(path, flat.unflatten(index, buf),
          meta=dict(meta or {}, flat_n=int(index.n)))
 
 
-def restore_to_buffer(path: str, like: Any) -> Tuple[Any, Any, Dict[str, Any]]:
+def restore_to_buffer(path: str, like: Any,
+                      mesh=None) -> Tuple[Any, Any, Dict[str, Any]]:
     """Restore a checkpoint straight onto the resident flat representation:
-    returns (FlatIndex, (N,) f32 buffer, meta) ready for ``run_rounds``."""
+    returns (FlatIndex, (N,) f32 buffer, meta) ready for ``run_rounds``.
+
+    With ``mesh`` set, the index pads N for the mesh's model shards and the
+    buffer is ``device_put`` onto the sharded P("model") global layout, so
+    the first resident round starts from N/n_model slices per device with
+    no reshard copy (matching what ``run_rounds`` builds itself).
+    """
     from repro.core import flat
+    from repro.sharding import cohort as cohort_sh
     tree, meta = restore(path, like)
-    index = flat.get_index(tree)
-    return index, flat.flatten(index, tree), meta
+    index = flat.get_index(tree, pad_to=cohort_sh.model_shards(mesh))
+    buf = flat.flatten(index, tree)
+    if mesh is not None:
+        buf = jax.device_put(buf, cohort_sh.global_sharding(mesh))
+    return index, buf, meta
 
 
 def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:

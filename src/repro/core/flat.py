@@ -69,9 +69,19 @@ class FlatIndex:
     Segments are (leaf, row) pairs: one per repeat of a depth-stacked leaf,
     one per unstacked leaf — exactly the granularity at which trimmed norms,
     scaling factors and depth gates vary.
+
+    ``pad_to`` rounds the flat length up to a multiple of the mesh
+    model-shard count (``n_padded``) so the (N,) axis divides evenly when
+    sharded over ``model`` — mirroring the inert ``n_data = 0`` client rows
+    of ``repro.sharding.cohort``.  The tail ``[n, n_padded)`` is an inert
+    zero segment: buffers are zero there, the width-mask density is zero
+    (so contrib/counts vanish and the γ = 0 rule keeps the merged global at
+    zero), the graft map is the identity, and no ``LeafSpec`` covers it, so
+    trimmed norms and α never see it.  All leaf offsets stay static and
+    independent of the padding.
     """
 
-    def __init__(self, params: Params):
+    def __init__(self, params: Params, pad_to: int = 1):
         leaves, self.treedef = tree_flatten_with_path(params)
         specs, row_of, seg_row, seg_stage0 = [], [], [], []
         g_base, g_row, g_rest = [], [], []
@@ -102,6 +112,14 @@ class FlatIndex:
         self.leaves = tuple(specs)
         self.n = off
         self.n_segments = seg
+        pad = (-off) % max(int(pad_to), 1)
+        self.n_padded = off + pad
+        if pad:                      # inert tail: density 0, identity graft
+            row_of.append(np.zeros(pad, np.int32))
+            rel = off + np.arange(pad, dtype=np.int64)
+            g_base.append(rel)
+            g_row.append(np.zeros(pad, np.int32))
+            g_rest.append(np.zeros(pad, np.int32))
         self.row_of = np.concatenate(row_of)
         self.seg_row = np.asarray(seg_row, np.int32)
         self.seg_stage0 = np.asarray(seg_stage0)
@@ -114,21 +132,23 @@ _INDEX_CACHE: "OrderedDict[Any, FlatIndex]" = OrderedDict()
 _INDEX_CACHE_MAX = 64
 
 
-def get_index(params: Params) -> FlatIndex:
+def get_index(params: Params, pad_to: int = 1) -> FlatIndex:
     """Build (or fetch the cached) FlatIndex for this params structure.
 
     Keyed on the treedef *and* the leaf (shape, dtype) layout: two pytrees
     with different container structure can share the same flatten order (e.g.
     a tuple vs a list at the same path), and unflatten must restore the right
-    one.  LRU-bounded so long-lived processes over many model configs don't
-    grow the cache without limit.
+    one.  ``pad_to`` (the mesh model-shard count, see ``FlatIndex``)
+    participates in the key — the same tree padded for different meshes has
+    different buffer widths.  LRU-bounded so long-lived processes over many
+    model configs don't grow the cache without limit.
     """
     leaves, treedef = tree_flatten_with_path(params)
-    key = (treedef,
+    key = (treedef, int(pad_to),
            tuple((tuple(x.shape), jnp.result_type(x).name) for _, x in leaves))
     idx = _INDEX_CACHE.get(key)
     if idx is None:
-        idx = _INDEX_CACHE[key] = FlatIndex(params)
+        idx = _INDEX_CACHE[key] = FlatIndex(params, pad_to=pad_to)
         while len(_INDEX_CACHE) > _INDEX_CACHE_MAX:
             _INDEX_CACHE.popitem(last=False)
     else:
@@ -148,32 +168,40 @@ def _check_layout(index: FlatIndex, leaves, stacked: bool) -> None:
 
 
 def flatten(index: FlatIndex, tree: Params) -> jax.Array:
-    """Pack one pytree into a contiguous (N,) f32 buffer."""
+    """Pack one pytree into a contiguous (n_padded,) f32 buffer (the inert
+    tail, if any, is zeros)."""
     leaves = jax.tree.leaves(tree)
     _check_layout(index, leaves, stacked=False)
-    return jnp.concatenate(
-        [jnp.ravel(x).astype(jnp.float32) for x in leaves])
+    parts = [jnp.ravel(x).astype(jnp.float32) for x in leaves]
+    if index.n_padded > index.n:
+        parts.append(jnp.zeros((index.n_padded - index.n,), jnp.float32))
+    return jnp.concatenate(parts)
 
 
 def flatten_stacked(index: FlatIndex, tree: Params) -> jax.Array:
-    """Pack a client-stacked pytree (leading axis m) into (m, N) f32."""
+    """Pack a client-stacked pytree (leading axis m) into (m, n_padded) f32
+    (zero inert tail)."""
     leaves = jax.tree.leaves(tree)
     _check_layout(index, leaves, stacked=True)
     m = leaves[0].shape[0]
-    return jnp.concatenate(
-        [x.reshape(m, -1).astype(jnp.float32) for x in leaves], axis=1)
+    parts = [x.reshape(m, -1).astype(jnp.float32) for x in leaves]
+    if index.n_padded > index.n:
+        parts.append(jnp.zeros((m, index.n_padded - index.n), jnp.float32))
+    return jnp.concatenate(parts, axis=1)
 
 
 def unflatten(index: FlatIndex, buf: jax.Array) -> Params:
-    """Unpack a (N,) buffer back into the pytree (original leaf dtypes)."""
+    """Unpack a (n_padded,) buffer back into the pytree (original leaf
+    dtypes); the inert tail is dropped."""
     outs = [buf[s.offset:s.offset + s.size].reshape(s.shape).astype(s.dtype)
             for s in index.leaves]
     return jax.tree_util.tree_unflatten(index.treedef, outs)
 
 
 def _density_and_fraction(cfg: ArchConfig, index: FlatIndex, mk: WidthMasks):
-    """One client's flat 0/1 width-mask density (N,) and per-leaf active
-    fraction (n_leaves,)."""
+    """One client's flat 0/1 width-mask density (n_padded,) and per-leaf
+    active fraction (n_leaves,).  The inert tail has density 0, which keeps
+    the pad region out of both (M', γ) sums."""
     ax = axis_mask_tree(cfg, mk)
     by_path = dict(tree_flatten_with_path(ax, is_leaf=_IS_AX)[0])
     dens, fracs = [], []
@@ -182,6 +210,8 @@ def _density_and_fraction(cfg: ArchConfig, index: FlatIndex, mk: WidthMasks):
         d = jnp.broadcast_to(mask_density(spec.shape, axl), spec.shape)
         dens.append(jnp.ravel(d).astype(jnp.float32))
         fracs.append(active_fraction(axl))
+    if index.n_padded > index.n:
+        dens.append(jnp.zeros((index.n_padded - index.n,), jnp.float32))
     return jnp.concatenate(dens), jnp.stack(fracs)
 
 
@@ -295,11 +325,19 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
     across rounds.  ``aggregate_flat`` below is the tree-in/tree-out wrapper.
 
     With ``mesh`` set, the client axis m is laid out over the mesh ``data``
-    axis (``repro.sharding.cohort``): the per-client elementwise passes are
-    pinned to that sharding and the two fused (M', γ) reductions run as
-    per-shard partial sums + one psum (``agg_ops.accumulate``).  Cohorts
-    padded with ``n_data = 0`` rows aggregate identically to the unpadded
-    cohort: zero weight in both sums, and excluded from the α mean below.
+    axis (``repro.sharding.cohort``): the per-client elementwise passes and
+    the trimmed-norm pass — which needs whole (client, segment) rows — are
+    pinned to that model-replicated sharding, and the N axis splits only in
+    the two fused (M', γ) reductions (``agg_ops.accumulate``): per-shard
+    partial sums, a reduce-scatter over ``model`` and one N/n_model-sized
+    psum over ``data``, so M', Γ, and the merged global below live as
+    N/n_model slices per device — zero all-gathers in the lowering, with
+    ``g_flat`` consumed shard-locally by the γ = 0 merge.  Cohorts padded
+    with ``n_data = 0`` rows aggregate identically to the unpadded cohort:
+    zero weight in both sums, and excluded from the α mean below.  The
+    parameter axis's inert zero tail (``index.n_padded``, see ``FlatIndex``)
+    is likewise invisible: density 0 in both sums and outside every norm
+    segment.
     """
     from repro.sharding.cohort import constrain_cohort
     if use_kernel is None:
@@ -342,7 +380,7 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
         x_g * dens if warow is None else x_g * dens * gather(warow), mesh)
     counts = constrain_cohort(
         dens if dwrow is None else dens * gather(dwrow), mesh)
-    ones_n = jnp.ones((index.n,), jnp.float32)
+    ones_n = jnp.ones((index.n_padded,), jnp.float32)
     Mp = agg_ops.accumulate(contrib, n_data, ones_n, use_kernel=use_kernel,
                             interpret=interpret, mesh=mesh)
     Gm = agg_ops.accumulate(counts, n_data, ones_n, use_kernel=use_kernel,

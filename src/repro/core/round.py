@@ -19,13 +19,29 @@ resident ``(N,)`` f32 global buffer and an ``(m, N)`` f32 cohort buffer:
 boundaries for eval/checkpoint.
 
 With a mesh (``mesh=`` on ``run_rounds``/``ResidentDriver``/``flat_round``,
-built by ``repro.launch.mesh.get_mesh``), the ``(m, N)`` client axis is
-sharded over the mesh ``data`` axis (``repro.sharding.cohort``): local
-training runs data-parallel over client shards, the (M', γ) reductions
-lower to per-shard partial sums + one psum, and the (N,) global buffer
-stays replicated.  Uneven cohorts are padded host-side with inert
-``n_data = 0`` rows; the donated ping-pong of the two buffers is unchanged
-(matching in/out shardings keep XLA aliasing them).
+built by ``repro.launch.mesh.get_mesh``), the round is 2-D SPMD over the
+``(data, model)`` axes (``repro.sharding.cohort``):
+
+  * the ``(m, N)`` client axis is sharded over ``data`` — local training
+    runs data-parallel over client shards; uneven cohorts are padded
+    host-side with inert ``n_data = 0`` rows,
+  * the ``(N,)`` parameter axis of both RESIDENT buffers is sharded over
+    ``model`` — the global buffer lives as P("model") and the donated
+    cohort scratch as P("data", "model"), each device keeping only its
+    N/n_model slice between rounds (N is padded to a multiple of the model
+    shards by ``flat.FlatIndex``, with an inert zero tail).
+
+Inside the round the global model is (unavoidably) gathered once into
+local training, and the freshly trained cohort is consumed by the
+aggregation in the pre-split P("data") layout — the trimmed-norm pass
+needs whole (client, segment) rows.  The N axis splits in the (M', γ)
+reductions via reduce-scatter + an N/n_model-sized psum
+(``kernels.fedfa_agg.ops.accumulate``), the γ = 0 merge runs on the
+slices, and the returned cohort buffer is constrained back to the 2-D
+layout by a communication-free local slice.  The aggregation path lowers
+with zero all-gathers; ``flat.unflatten`` re-gathers the global buffer
+only at eval/checkpoint boundaries.  The donated ping-pong of the two
+buffers is unchanged (matching in/out shardings keep XLA aliasing them).
 """
 from __future__ import annotations
 
@@ -58,6 +74,17 @@ def _fl_static(fl: FLConfig) -> Tuple:
             fl.use_kernel, fl.interpret)
 
 
+def _mesh_key(mesh) -> Optional[Tuple]:
+    """Value key for a mesh: reconstructing an identical mesh (same device
+    ids, axis names, shape) must hit the round cache instead of recompiling
+    every cohort shape — Mesh object identity is not stable across
+    ``make_mesh`` calls."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
 def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                     *, any_malicious: bool, donate: bool = True,
                     mesh=None, m_real: Optional[int] = None):
@@ -65,46 +92,49 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
 
     Signature of the returned function:
       (g_buf (N,), c_buf (m, N) scratch, masks, gates, gmaps, nd, cms, mal,
-       batches, key) -> (g_buf' (N,), x (m, N) stacked updates, mean loss)
+       batches, keys (m, ...)) -> (g_buf' (N,), x (m, N) updates, mean loss)
 
     g_buf and c_buf are donated; the new cohort buffer x reuses c_buf's
     allocation and is what the caller donates back next round.
 
+    ``keys`` are the per-client PRNG keys, split HOST-side by the caller
+    (``flat_round``): splitting inside the traced program is not safe under
+    a mesh — GSPMD may partition the threefry computation differently per
+    mesh shape, changing the malicious label-shuffle bits (observed on
+    (data, model) meshes) — and host-side keys match the per-round
+    ``server.fl_round`` bit-for-bit.
+
     With ``mesh`` set the program carries explicit in/out shardings: the
-    cohort-stacked arguments (and x) over the mesh ``data`` axis, g_buf /
-    key / loss replicated.  ``m_real`` (static) marks the number of real
-    rows of a padded cohort — the reported loss averages over those only
-    (pad rows are already inert in aggregation via ``n_data = 0``).
+    cohort-stacked arguments (keys, and x) over the mesh ``data`` axis,
+    g_buf over ``model``, c_buf/x over ``(data, model)``, loss replicated.
+    ``m_real`` (static) marks the number of real rows of a padded cohort —
+    the reported loss averages over those only (pad rows are already inert
+    in aggregation via ``n_data = 0``).
     """
     key = (index, cfg, _fl_static(fl), bool(any_malicious), bool(donate),
-           mesh, m_real)
+           _mesh_key(mesh), m_real)
     fn = _ROUND_CACHE.get(key)
     if fn is not None:
         _ROUND_CACHE.move_to_end(key)
         return fn
     kw = STRATEGIES[fl.strategy]
 
-    def _round(g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches, k):
-        m = nd.shape[0]
+    def _round(g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches,
+               keys):
         g = flat.unflatten(index, g_buf)           # leaf dtypes, inside trace
-        # split per-client keys for the REAL rows only: padded cohorts must
-        # hand row i the same key the unpadded cohort would (the malicious
-        # label-shuffle consumes it), so pad rows reuse key 0
-        keys = jax.random.split(k, m if m_real is None else m_real)
-        if m_real is not None and m > m_real:
-            keys = jnp.concatenate(
-                [keys, jnp.broadcast_to(keys[:1],
-                                        (m - m_real,) + keys.shape[1:])])
         updated, losses = cohort_update(
             g, cfg, fl, masks, gates, batches, cms, mal, keys,
             any_malicious=any_malicious)
+        # the aggregation consumes x in the pre-split P("data") layout (the
+        # norm pass needs whole rows); the RETURNED cohort buffer is then
+        # sliced down to the resident 2-D P("data", "model") layout for free
         x = cohort_sh.constrain_cohort(
             flat.flatten_stacked(index, updated), mesh)             # (m, N)
         g_new = flat.aggregate_buffers(
             index, g_buf, x, cfg, masks, gates, gmaps, nd, trim=fl.trim,
             use_kernel=fl.use_kernel, interpret=fl.interpret, mesh=mesh, **kw)
         loss = jnp.mean(losses if m_real is None else losses[:m_real])
-        return g_new, x, loss
+        return g_new, cohort_sh.constrain_cohort_buffer(x, mesh), loss
 
     jit_kw = {}
     if mesh is not None:
@@ -143,12 +173,21 @@ def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
             runtimes, batches, pad)
         m_real, m = m, m + pad
     if c_buf is None or c_buf.is_deleted() or c_buf.shape[0] != m:
-        c_buf = jnp.zeros((m, index.n), jnp.float32)
+        c_buf = jnp.zeros((m, index.n_padded), jnp.float32)
     cms_in = default_class_masks(cms, cfg, fl, m)
+    # split per-client keys HOST-side (see make_flat_round), for the REAL
+    # rows only: padded cohorts must hand row i the same key the unpadded
+    # cohort would (the malicious label-shuffle consumes it), so pad rows
+    # reuse key 0
+    keys = jax.random.split(key, m if m_real is None else m_real)
+    if m_real is not None and m > m_real:
+        keys = jnp.concatenate(
+            [keys, jnp.broadcast_to(keys[:1],
+                                    (m - m_real,) + keys.shape[1:])])
     fn = make_flat_round(cfg, fl, index, any_malicious=any_malicious,
                          mesh=mesh, m_real=m_real)
     return fn(g_buf, c_buf, masks, gates, gmaps, nd, cms_in, mal, batches,
-              key)
+              keys)
 
 
 class ResidentDriver:
@@ -198,13 +237,14 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
     """
     if rounds <= 0:
         return global_params, []
-    index = flat.get_index(global_params)
+    index = flat.get_index(global_params,
+                           pad_to=cohort_sh.model_shards(mesh))
     driver = ResidentDriver(cfg, fl, index, mesh=mesh)
     g_buf = flat.flatten(index, global_params)
     if mesh is not None:
-        # place the global buffer on its replicated sharding up front so the
-        # first round's donation isn't defeated by an implicit reshard copy
-        g_buf = jax.device_put(g_buf, cohort_sh.replicated(mesh))
+        # place the global buffer on its model-sharded layout up front so
+        # the first round's donation isn't defeated by an implicit reshard
+        g_buf = jax.device_put(g_buf, cohort_sh.global_sharding(mesh))
     losses: List[jax.Array] = []
     for r in range(rounds):
         specs, batches = data_fn(r)

@@ -62,19 +62,39 @@ def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
     With ``mesh`` set (and the client axis laid out over its ``data`` axis,
     see ``repro.sharding.cohort``), the reduction is expressed with
     ``shard_map``: each device reduces its own client shard — through the
-    Pallas kernel on TPU — and a single ``psum`` combines the partial sums,
-    so the lowering never materializes a replicated (m, n) gather.
+    Pallas kernel on TPU — so the lowering never materializes a replicated
+    (m, n) gather.  On a data-only mesh a single n-sized ``psum`` combines
+    the partial sums (output replicated).  With model shards (and n
+    divisible by them) the reduction instead **reduce-scatters**: the model
+    peers of each data shard split that shard's client rows between them
+    (zeroing the other peers' weights — exact, any row count), a
+    ``psum_scatter`` over ``model`` sums the partials while scattering the
+    n axis, and the finishing ``psum`` over ``data`` moves only n/n_model
+    elements per device.  The output is then sharded P("model") — exactly
+    the resident global-buffer layout, so the caller's (M'/Γ, γ = 0) merge
+    stays shard-local.
     """
-    from repro.sharding.cohort import shardable
+    from repro.sharding.cohort import (DATA_AXIS, MODEL_AXIS, model_shards,
+                                       shardable)
     if use_kernel is None:
         use_kernel = _on_tpu()
     if not shardable(mesh, x.shape[0]):
         return _accum_local(x, weights, mask, use_kernel, interpret)
+    mo = model_shards(mesh)
+    if x.shape[1] % mo != 0:     # non-divisible n: data-only reduction
+        mo = 1
 
     def _shard(xs, ws, ms):
+        if mo > 1:
+            slot = (jnp.arange(xs.shape[0]) * mo) // xs.shape[0]
+            ws = jnp.where(slot == jax.lax.axis_index(MODEL_AXIS), ws, 0.0)
         part = _accum_local(xs, ws, ms, use_kernel, interpret)
-        return jax.lax.psum(part, "data")
+        if mo > 1:
+            part = jax.lax.psum_scatter(part, MODEL_AXIS,
+                                        scatter_dimension=0, tiled=True)
+        return jax.lax.psum(part, DATA_AXIS)
 
+    out_spec = P(MODEL_AXIS) if mo > 1 else P(None)
     return shard_map(_shard, mesh=mesh,
-                     in_specs=(P("data", None), P("data"), P(None)),
-                     out_specs=P(None), check_rep=False)(x, weights, mask)
+                     in_specs=(P(DATA_AXIS, None), P(DATA_AXIS), P(None)),
+                     out_specs=out_spec, check_rep=False)(x, weights, mask)

@@ -259,8 +259,13 @@ def main() -> None:
                          "(N,)/(m,N) buffers; per-round: re-dispatch each round")
     ap.add_argument("--mesh", choices=["none", "host", "production"],
                     default="none",
-                    help="shard the resident round's client axis over the "
-                         "mesh data axis (host: all local devices)")
+                    help="shard the resident round over the mesh: client "
+                         "axis over data, (N,) parameter axis over model "
+                         "(host: all local devices on data)")
+    ap.add_argument("--mesh-shape", default=None, metavar="DxM",
+                    help="explicit (data, model) mesh shape for the "
+                         "resident round, e.g. 2x2 — D client shards x M "
+                         "parameter shards; overrides --mesh")
     ap.add_argument("--use-kernel", choices=["auto", "on", "off"],
                     default="auto",
                     help="flat engine: Pallas kernel dispatch (auto=TPU only)")
@@ -283,7 +288,7 @@ def main() -> None:
                      arch_mode=args.arch_mode, task=args.task,
                      eval_every=args.eval_every,
                      agg_engine=args.agg_engine, driver=args.driver,
-                     mesh=args.mesh,
+                     mesh=args.mesh_shape or args.mesh,
                      use_kernel={"auto": None, "on": True,
                                  "off": False}[args.use_kernel],
                      interpret=args.interpret, ckpt=args.ckpt)

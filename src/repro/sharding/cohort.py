@@ -1,22 +1,41 @@
-"""Cohort-axis sharding for the resident FL round.
+"""2-D ``(data, model)`` sharding for the resident FL round.
 
 The resident round (``repro.core.round.flat_round``) is an SPMD reduction
-over the client cohort: every argument with a leading client axis m — the
-(m, N) cohort buffer, stacked width masks / depth gates / graft maps, data
-counts, class masks, malicious flags and the stacked local batches — is
-partitioned over the mesh ``data`` axis, while the (N,) global buffer (and
-the PRNG key) stay replicated.  Local training then runs data-parallel over
-client shards and the fused (M', γ) reductions lower to per-shard partial
-sums plus one ``psum`` (see ``repro.kernels.fedfa_agg.ops.accumulate``).
-The trimmed-norm pass — including the fused Pallas trimmed-quantile kernel
-(``repro.kernels.fedfa_quantile``) — is per-(client, segment) work with no
-collectives, so it runs entirely inside each shard of the same shard_map.
+over the client cohort, laid out over a 2-D mesh:
+
+  * **client axis m over ``data``** — every argument with a leading client
+    axis (the (m, N) cohort buffer, stacked width masks / depth gates /
+    graft maps, data counts, class masks, malicious flags and the stacked
+    local batches) is partitioned over the mesh ``data`` axis.  Local
+    training runs data-parallel over client shards.
+  * **parameter axis N over ``model``** — the two *resident* N-sized
+    buffers, the (N,) global model and the donated (m, N) cohort scratch,
+    keep only an N/n_model slice per device between rounds
+    (``global_sharding`` = P("model"), ``cohort_buffer_sharding`` =
+    P("data", "model")), FSDP-style.
+
+Inside the round the N axis splits *late*: the trimmed-norm / quantile
+pass needs whole (client, segment) rows, so grafting, densities and norms
+run data-axis-only on a transiently model-replicated (m/D, N) shard
+(``cohort_sharding`` = P("data") — exactly PR 3's layout), with no
+collectives.  Only the two fused (M', γ) reductions split N: each device
+reduces a balanced subset of its client shard, a ``psum_scatter`` over
+``model`` (lowered as a reduce-scatter) combines them while scattering N,
+and one N/n_model-sized ``psum`` over ``data`` finishes the sum (see
+``repro.kernels.fedfa_agg.ops.accumulate``).  The (M'/Γ, γ = 0) merge then
+runs per-shard on the N/n_model slices.  The aggregation path therefore
+lowers with ZERO all-gathers and per-device all-reduce volume ~N/n_model;
+the only all-gather in the whole round is the unavoidable global-model
+broadcast into local training.
 
 Uneven cohorts (m % n_data_shards != 0) are handled host-side by padding
 the cohort with inert rows: ``n_data = 0`` zeroes a pad row's weight in
 both accumulated sums (the γ = 0 keep-global rule already covers segments
 nobody updates) and the round program averages the reported loss over the
-real rows only.
+real rows only.  The parameter axis pads the same way: ``flat.FlatIndex``
+rounds N up to a multiple of the model-shard count with an inert
+zero-density tail segment (offsets stay static; pads never enter norms, α
+or the merged global — see ``flat.FlatIndex``).
 """
 from __future__ import annotations
 
@@ -28,6 +47,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 DATA_AXIS = "data"
+MODEL_AXIS = "model"
 
 
 def data_shards(mesh: Optional[Mesh]) -> int:
@@ -35,6 +55,14 @@ def data_shards(mesh: Optional[Mesh]) -> int:
     if mesh is None:
         return 1
     return int(mesh.shape[DATA_AXIS])
+
+
+def model_shards(mesh: Optional[Mesh]) -> int:
+    """Number of shards of the (N,) parameter axis (1 without a mesh or
+    without a ``model`` mesh axis)."""
+    if mesh is None or MODEL_AXIS not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[MODEL_AXIS])
 
 
 def shardable(mesh: Optional[Mesh], m: int) -> bool:
@@ -60,19 +88,43 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def global_sharding(mesh: Mesh) -> NamedSharding:
+    """The resident (N,) global buffer: sharded over ``model`` (replicated
+    when the mesh has no model shards, so data-only meshes keep PR 3's
+    layout bit-for-bit)."""
+    if model_shards(mesh) == 1:
+        return replicated(mesh)
+    return NamedSharding(mesh, P(MODEL_AXIS))
+
+
+def cohort_buffer_sharding(mesh: Mesh) -> NamedSharding:
+    """The resident donated (m, N) cohort buffer: clients over ``data`` AND
+    the parameter axis over ``model`` — the between-rounds layout.  Inside
+    the round the aggregation consumes the cohort in the pre-split
+    ``cohort_sharding`` layout (norms need whole rows); the output is
+    constrained to this 2-D layout only at the end, a communication-free
+    local slice."""
+    if model_shards(mesh) == 1:
+        return cohort_sharding(mesh)
+    return NamedSharding(mesh, P(DATA_AXIS, MODEL_AXIS))
+
+
 def round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
     """(in_shardings, out_shardings) for the resident round program
 
-      (g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches, key)
+      (g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches, keys)
         -> (g_buf', x, loss)
 
     matching ``repro.core.round.make_flat_round``: cohort-stacked arguments
-    sharded over ``data``, the global buffer / key / loss replicated.  The
-    donated pairs keep matching shardings (g_buf -> g_buf' replicated,
-    c_buf -> x cohort-sharded) so XLA can still alias their buffers.
+    (including the host-split per-client keys) sharded over ``data``, the
+    (N,) global buffer over ``model``, the donated (m, N) scratch over
+    ``(data, model)``, loss replicated.  The donated pairs keep matching
+    in/out shardings (g_buf -> g_buf', c_buf -> x) so XLA can still alias
+    their buffers.
     """
     co, rep = cohort_sharding(mesh), replicated(mesh)
-    return ((rep, co, co, co, co, co, co, co, co, rep), (rep, co, rep))
+    gl, cb = global_sharding(mesh), cohort_buffer_sharding(mesh)
+    return ((gl, cb, co, co, co, co, co, co, co, co), (gl, cb, rep))
 
 
 def constrain_cohort(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
@@ -85,6 +137,16 @@ def constrain_cohort(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
     if mesh is None:
         return x
     return jax.lax.with_sharding_constraint(x, cohort_sharding(mesh))
+
+
+def constrain_cohort_buffer(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
+    """Pin the round's returned (m, N) cohort buffer to the resident 2-D
+    layout (clients over ``data``, N over ``model``).  Coming from the
+    model-replicated ``cohort_sharding`` layout this is a local slice —
+    each device drops the N-slices it no longer owns, no collectives."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, cohort_buffer_sharding(mesh))
 
 
 def pad_rows(m: int, mesh: Optional[Mesh]) -> int:

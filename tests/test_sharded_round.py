@@ -163,6 +163,106 @@ def test_kernelized_quantile_collectives_forced_multidevice():
     assert "QUANTILE COLLECTIVES OK" in out
 
 
+def test_two_d_round_forced_multidevice():
+    """2x2 (data, model) resident round on 4 forced CPU devices: parity vs
+    the 1-device round (fedfa + heterofl, uneven m=3, malicious client),
+    N-pad-segment inertness through the full round, model-sharded resident
+    buffers (N/2 bytes per device) with ping-pong donation, and a
+    checkpoint roundtrip from/to the sharded global layout."""
+    assert "TWO-D OK" in _run_forced_multidevice_child("--two-d")
+
+
+def test_agg_collectives_2d_forced_multidevice():
+    """The 2x2 aggregation path lowers with ZERO all-gathers, >= 1
+    reduce-scatter, and no all-reduce above N/n_model elements."""
+    out = _run_forced_multidevice_child("--agg-collectives-2d")
+    assert "AGG COLLECTIVES 2D OK" in out
+
+
+# ---------------------------------------------------------------------------
+# N-padding (host-side, no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_flat_index_n_padding_roundtrip_and_inertness():
+    """A pad_to that does not divide N grows an inert zero tail: offsets are
+    unchanged, flatten/unflatten round-trips, the tail has zero density and
+    the padded aggregation equals the unpadded one with a zero tail."""
+    tree = {"a": jnp.arange(3.0), "b": jnp.arange(4.0).reshape(2, 2)}
+    idx1 = flat.get_index(tree)
+    idx8 = flat.get_index(tree, pad_to=8)
+    assert idx1.n == idx8.n == 7
+    assert idx1.n_padded == 7 and idx8.n_padded == 8
+    assert [s.offset for s in idx1.leaves] == [s.offset for s in idx8.leaves]
+    assert idx8.row_of.shape == (8,) and idx8.g_base.shape == (8,)
+    buf = flat.flatten(idx8, tree)
+    assert buf.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(buf)[7:], 0.0)
+    _assert_tree_allclose(flat.unflatten(idx8, buf), tree, rtol=0, atol=0)
+    st = jax.tree.map(lambda l: jnp.stack([l, 2.0 * l]), tree)
+    sbuf = flat.flatten_stacked(idx8, st)
+    assert sbuf.shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(sbuf)[:, 7:], 0.0)
+
+
+def test_aggregate_buffers_pad_tail_is_inert():
+    """On the real fixture, an aggregation through a padded index matches
+    the unpadded aggregation on the logical prefix and keeps the tail 0."""
+    index = flat.get_index(PARAMS)
+    pad_to = 1024
+    index_p = flat.get_index(PARAMS, pad_to=pad_to)
+    assert index_p.n_padded > index_p.n, "fixture N divides pad_to"
+    specs, _ = make_cohort(CFG, M, local_steps=E)
+    masks, gates, gmaps, nd, _, _ = stack_runtimes(CFG, specs)
+    g = flat.flatten(index, PARAMS)
+    x = jnp.stack([g * (1.0 + 0.01 * (i + 1)) for i in range(M)])
+    g_p = flat.flatten(index_p, PARAMS)
+    x_p = jnp.pad(x, ((0, 0), (0, index_p.n_padded - index_p.n)))
+    for graft, scale in [(True, True), (False, False)]:
+        out = flat.aggregate_buffers(index, g, x, CFG, masks, gates, gmaps,
+                                     nd, graft=graft, scale=scale)
+        out_p = flat.aggregate_buffers(index_p, g_p, x_p, CFG, masks, gates,
+                                       gmaps, nd, graft=graft, scale=scale)
+        np.testing.assert_allclose(np.asarray(out_p)[:index.n],
+                                   np.asarray(out), rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(out_p)[index.n:], 0.0)
+
+
+def test_round_cache_hits_on_reconstructed_mesh():
+    """_ROUND_CACHE keys the mesh by value: an identical mesh rebuilt from
+    the same devices/axes must reuse the compiled round program instead of
+    recompiling every cohort shape."""
+    index = flat.get_index(PARAMS)
+    fl = _fl("fedfa")
+    fn1 = round_mod.make_flat_round(CFG, fl, index, any_malicious=False,
+                                    mesh=make_data_mesh())
+    fn2 = round_mod.make_flat_round(CFG, fl, index, any_malicious=False,
+                                    mesh=make_data_mesh())
+    assert fn1 is fn2
+    assert round_mod._mesh_key(make_data_mesh()) \
+        == round_mod._mesh_key(make_data_mesh())
+    assert round_mod._mesh_key(None) is None
+
+
+def test_mesh_shape_validation_and_parsing():
+    """get_mesh validates the requested shape against the visible device
+    count, naming both, and accepts explicit DxM shapes."""
+    from repro.launch import mesh as mesh_mod
+    n_dev = jax.device_count()
+    with pytest.raises(ValueError, match=rf"256 devices.*{n_dev} are visible"):
+        mesh_mod.get_mesh("production")
+    with pytest.raises(ValueError, match=rf"needs {8 * n_dev} devices"):
+        mesh_mod.get_mesh(f"{8 * n_dev}x1")
+    assert mesh_mod.parse_mesh_shape("2x2") == (2, 2)
+    assert mesh_mod.parse_mesh_shape(" 4X2 ") == (4, 2)
+    for bad in ("2x", "x2", "0x2", "2x2x2", "host"):
+        with pytest.raises(ValueError):
+            mesh_mod.parse_mesh_shape(bad)
+    m = mesh_mod.get_mesh(f"{n_dev}x1")
+    assert m.shape["data"] == n_dev and m.shape["model"] == 1
+    with pytest.raises(ValueError, match="unknown mesh"):
+        mesh_mod.get_mesh("banana")
+
+
 # ---------------------------------------------------------------------------
 # Satellite regressions
 # ---------------------------------------------------------------------------
