@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile
+.PHONY: tier1 check bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
@@ -27,3 +27,7 @@ bench-shard-2d:   ## 2x2 (data, model) mesh only: reduce-scattered aggregation -
 bench-quantile:   ## fused trimmed-quantile kernel vs top_k path (4 forced CPU devices) -> BENCH_quantile.json
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
 		$(PY) benchmarks/bench_quantile.py
+
+bench-async:      ## async bounded-staleness engine vs sync driver on the skewed trace (4 forced CPU devices) -> BENCH_async.json
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+		$(PY) benchmarks/bench_async.py --min-ratio 1.3

@@ -1,0 +1,286 @@
+"""Async engine benchmark: bounded-staleness merges vs synchronous rounds.
+
+Drives the async engine (``repro.core.async_round``) and the synchronous
+resident driver over the SAME trace-driven client stream — per-client
+latencies hashed from a ``repro.sim.ClientPopulation`` device-class fleet
+(lognormal, heavily skewed: the mobile tail's median is 30x the servers')
+— and reports throughput in SIMULATED time, the deterministic trace-derived
+metric the gate rides on:
+
+  * sync: a round ends when its slowest cohort member returns, so round r
+    costs ``max(latency over the round's m clients)`` simulated seconds;
+  * async: a merge fires on ``merge_k`` arrivals (bounded staleness), so
+    the engine's clock after R merges IS the async cost of R global
+    updates.
+
+``ratio = sync_rounds_per_sim_s / async_merges_per_sim_s`` — gated >= 1.3x
+under ``--min-ratio`` (CI smoke).  Host wall-clock for both drivers is
+recorded as well but NOT gated (CPU wall time is noisy and both drivers
+run the same jitted training/aggregation programs).  The run also gates
+the two structural invariants: parity mode bit-equal to ``run_rounds``,
+and ZERO all-gathers in the lowered merge program's aggregation (when >= 2
+devices are present — CI forces 4).  Emits ``BENCH_async.json`` (or
+``results/BENCH_async_smoke.json`` with ``--smoke``).
+
+  PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--min-ratio X]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _setup(m, local_steps, batch, seq_len, seed=0):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core.server import FLConfig, make_client_specs
+    from repro.data import partition as part_mod
+    from repro.data import pipeline, synthetic
+    from repro.launch.train import client_arch_pool
+    from repro.models import model as model_mod
+
+    n_classes = 10
+    cfg = get_arch("smollm-135m").reduced().replace(
+        n_layers=4, n_sections=2, vocab_size=64, tie_embeddings=False)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    specs = make_client_specs(cfg, m, archs=client_arch_pool(cfg, "width"),
+                              seed=seed)
+    parts = part_mod.iid_partition(m, n_classes, seed=seed)
+    profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size,
+                                             seed=seed)
+
+    def data_fn(r):
+        b = pipeline.round_batches_cls(
+            parts, list(range(m)), n_classes, cfg.vocab_size,
+            local_steps=local_steps, batch=batch, seq_len=seq_len,
+            profiles=profiles, seed=100 + r)
+        return specs, {k: jnp.asarray(v) for k, v in b.items()}
+
+    fl = FLConfig(local_steps=local_steps, lr=0.05, strategy="fedfa",
+                  task="cls", agg_engine="flat")
+    return cfg, fl, params, specs, data_fn
+
+
+def _trace_latency_fn(seed=0, n_clients=10_000):
+    """Deterministic per-stream-client latency from the hashed device-class
+    population — the skewed trace both drivers are measured against."""
+    from repro.sim import ClientPopulation
+    pop = ClientPopulation(n_clients, seed=seed)
+
+    def lat(i: int) -> float:
+        return float(pop.latency(np.asarray([i % n_clients]),
+                                 nonce=i // n_clients)[0])
+    return lat
+
+
+def _check_parity(cfg, fl, params, data_fn, m, rounds=2):
+    """Bit-equality gate: parity-mode async == run_rounds."""
+    import jax
+    from repro.core.async_round import AsyncConfig, run_async
+    from repro.core.round import run_rounds
+    from repro.sim import ParitySource
+
+    key = jax.random.PRNGKey(1)
+    p_sync, l_sync = run_rounds(params, cfg, fl, rounds, data_fn, key,
+                                eval_every=0)
+    p_async, l_async = run_async(params, cfg, fl, rounds,
+                                 ParitySource(data_fn), key,
+                                 acfg=AsyncConfig.parity(m), eval_every=0)
+    if l_sync != l_async:
+        return False
+    return all(bool((np.asarray(a) == np.asarray(b)).all())
+               for a, b in zip(jax.tree.leaves(p_sync),
+                               jax.tree.leaves(p_async)))
+
+
+def _merge_all_gathers(cfg, fl, params, specs, rows):
+    """All-gather count in the lowered merge program's aggregation (needs a
+    multi-device backend for the collectives to exist; returns None on one
+    device)."""
+    import jax
+    import jax.numpy as jnp
+    if jax.device_count() < 2:
+        return None
+    from repro.core import flat
+    from repro.core.async_round import make_merge_program
+    from repro.core.server import stack_runtimes
+    from repro.launch.mesh import make_data_mesh
+    from repro.sharding import cohort as csh
+    from repro.sharding import collectives as coll
+
+    mesh = make_data_mesh()
+    index = flat.get_index(params, pad_to=csh.model_shards(mesh))
+    row_specs = (specs * rows)[:rows]
+    masks, gates, gmaps, _, _, _ = stack_runtimes(cfg, row_specs)
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
+    c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
+                       csh.cohort_sharding(mesh))
+    w = jnp.arange(rows, dtype=jnp.float32)
+    fl_k = fl.__class__(**{**fl.__dict__, "use_kernel": True,
+                           "interpret": True})
+    fn = make_merge_program(cfg, fl_k, index, mesh=mesh, rows=rows)
+    txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
+    return coll.count(txt, "all-gather")
+
+
+def _run_async_traced(cfg, fl, params, data_fn, lat, m, merges,
+                      merge_k, staleness_max):
+    """(sim_time, merged_rows, wall_s) for R bounded-staleness merges over
+    the traced stream."""
+    import jax
+    from repro.core import flat
+    from repro.core.async_round import AsyncConfig, AsyncEngine
+    from repro.sim import TraceSource
+
+    acfg = AsyncConfig(capacity=m, merge_k=merge_k,
+                       staleness_max=staleness_max)
+    index = flat.get_index(params)
+    eng = AsyncEngine(flat.flatten(index, params), cfg, fl, index,
+                      TraceSource(data_fn, lat), jax.random.PRNGKey(1),
+                      acfg=acfg)
+    while eng.merges < 1:            # compile/warm outside the timed window
+        eng.step()
+    t0 = time.perf_counter()
+    warm_now, warm_rows = eng.now, eng.merged_rows
+    while eng.merges < merges + 1:
+        eng.step()
+    jax.block_until_ready(eng.g_buf)
+    wall = time.perf_counter() - t0
+    return eng.now - warm_now, eng.merged_rows - warm_rows, wall
+
+
+def _run_sync_traced(cfg, fl, params, data_fn, lat, m, rounds):
+    """(sim_time, wall_s) for R synchronous rounds over the same stream:
+    round r consumes stream clients [r*m, (r+1)*m) and costs their max
+    latency in simulated time."""
+    import jax
+    from repro.core import flat
+    from repro.core.round import ResidentDriver
+
+    sim = sum(max(lat(r * m + i) for i in range(m))
+              for r in range(rounds))
+    index = flat.get_index(params)
+    driver = ResidentDriver(cfg, fl, index, mesh=None)
+    key = jax.random.PRNGKey(1)
+    specs, batches = data_fn(0)
+    g_buf = flat.flatten(index, params)
+    g_buf, _ = driver.round(g_buf, specs, batches,
+                            jax.random.fold_in(key, 0))   # compile + warm
+    jax.block_until_ready(g_buf)
+    t0 = time.perf_counter()
+    for r in range(1, rounds + 1):
+        specs, batches = data_fn(r)
+        g_buf, _ = driver.round(g_buf, specs, batches,
+                                jax.random.fold_in(key, r))
+    jax.block_until_ready(g_buf)
+    return sim, time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cohorts", nargs="+", type=int, default=[8],
+                    help="pool capacity / sync cohort size m")
+    ap.add_argument("--merges", type=int, default=8,
+                    help="timed merges (async) / rounds (sync)")
+    ap.add_argument("--merge-k", type=int, default=0,
+                    help="async merge threshold (0 = m // 2)")
+    ap.add_argument("--staleness-max", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="m=4 only, 4 merges — the tier-1 CI configuration")
+    ap.add_argument("--min-ratio", type=float, default=None,
+                    help="exit 1 if async/sync simulated rounds-per-second "
+                         "falls below this for any m")
+    ap.add_argument("--out", default=None,
+                    help="output json (default: BENCH_async.json, or "
+                         "results/BENCH_async_smoke.json with --smoke so CI "
+                         "smoke runs don't clobber the checked-in anchor)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.cohorts, args.merges = [4], 4
+    if args.out is None:
+        args.out = "results/BENCH_async_smoke.json" if args.smoke \
+            else "BENCH_async.json"
+
+    import jax
+
+    results = {"backend": jax.default_backend(),
+               "devices": jax.device_count(),
+               "config": {"merges": args.merges,
+                          "staleness_max": args.staleness_max,
+                          "local_steps": args.local_steps,
+                          "batch": args.batch, "seq_len": args.seq_len,
+                          "trace": "ClientPopulation(10k, seed=0) hashed "
+                                   "device-class lognormal latencies"},
+               "runs": {}}
+    ok = True
+    lat = _trace_latency_fn()
+    for m in args.cohorts:
+        merge_k = args.merge_k if args.merge_k > 0 else max(1, m // 2)
+        cfg, fl, params, specs, data_fn = _setup(
+            m, args.local_steps, args.batch, args.seq_len)
+        parity = _check_parity(cfg, fl, params, data_fn, m)
+        if not parity:
+            print(f"FAIL: parity mode not bit-equal to run_rounds at m={m}",
+                  flush=True)
+            ok = False
+        sync_sim, sync_wall = _run_sync_traced(
+            cfg, fl, params, data_fn, lat, m, args.merges)
+        async_sim, async_rows, async_wall = _run_async_traced(
+            cfg, fl, params, data_fn, lat, m, args.merges,
+            merge_k, args.staleness_max)
+        gathers = _merge_all_gathers(cfg, fl, params, specs,
+                                     rows=m + (-m) % jax.device_count())
+        sync_rps = args.merges / sync_sim
+        async_rps = args.merges / async_sim
+        rec = {
+            "merge_k": merge_k,
+            "parity_bit_equal": parity,
+            "sim": {"sync_rounds_per_s": round(sync_rps, 5),
+                    "async_merges_per_s": round(async_rps, 5),
+                    "ratio": round(async_rps / sync_rps, 3),
+                    "sync_clients_per_s": round(
+                        args.merges * m / sync_sim, 5),
+                    "async_clients_per_s": round(
+                        async_rows / async_sim, 5)},
+            "wall_s_not_gated": {"sync": round(sync_wall, 3),
+                                 "async": round(async_wall, 3)},
+            "merge_all_gathers": gathers,
+        }
+        results["runs"][f"m{m}"] = rec
+        print(f"m={m:3d}  sim sync {sync_rps:8.4f} r/s  "
+              f"async {async_rps:8.4f} m/s  ratio {rec['sim']['ratio']:.2f}x"
+              f"  parity={'OK' if parity else 'FAIL'}"
+              f"  all-gathers={gathers}", flush=True)
+        if gathers is not None and gathers != 0:
+            print(f"FAIL: {gathers} all-gather(s) in the merge aggregation "
+                  f"at m={m}", flush=True)
+            ok = False
+        if args.min_ratio is not None \
+                and rec["sim"]["ratio"] < args.min_ratio:
+            print(f"FAIL: async/sync ratio {rec['sim']['ratio']:.2f}x "
+                  f"< required {args.min_ratio:.2f}x at m={m}", flush=True)
+            ok = False
+
+    out = args.out if os.path.isabs(args.out) else os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                     args.out))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -153,6 +153,12 @@ def check() -> None:
          [sys.executable,
           os.path.join(root, "benchmarks", "bench_quantile.py"),
           "--smoke"], shard_env),
+        # async engine smoke: parity mode bit-equal to run_rounds, >= 1.3x
+        # simulated rounds/sec over the sync driver under the skewed
+        # device-class trace, zero all-gathers in the merge aggregation
+        ("async-engine smoke bench (4 forced CPU devices)",
+         [sys.executable, os.path.join(root, "benchmarks", "bench_async.py"),
+          "--smoke", "--min-ratio", "1.3"], shard_env),
     ]
     for name, cmd, step_env in steps:
         print(f"== {name}: {' '.join(cmd)}", flush=True)

@@ -1,0 +1,514 @@
+"""Continuous-arrival async round engine (FedBuff-style, bounded staleness).
+
+The resident driver (``repro.core.round``) is strictly synchronous: one
+straggler stalls the whole cohort.  This module runs the same donated
+buffers as a fixed-capacity **slot pool**: client updates are admitted into
+rows of the resident (rows, N) cohort buffer as they land in simulated
+time, and a **merge** folds the arrived rows into the (N,) global whenever
+``merge_k`` rows are ready OR a deadline fires.  Staleness is bounded and
+discounted: a row dispatched at global version v and merged at version v'
+carries weight ``n_data * staleness_weight(v' - v)``, zero beyond
+``staleness_max`` — folded into the existing validity-weighted ``nd`` path
+of ``flat.aggregate_buffers``, so the fused grafting/trimmed-quantile
+kernels are reused unchanged (a zero-weight row is inert in every
+reduction, exactly like a mesh pad row).
+
+Two jitted programs per pool shape, sharing ``round._ROUND_CACHE``:
+
+  * **admit** — vmapped local training of one dispatch group against the
+    current global, scattered into the group's slot rows
+    (``c_buf.at[slots].set``, out-of-bounds pad entries dropped); c_buf is
+    donated so admissions ping-pong one allocation.
+  * **merge** — ``flat.aggregate_buffers`` over the whole pool with the
+    per-row staleness-discounted weights; g_buf is donated, the pool
+    buffer is read-only (unmerged in-flight rows survive).
+
+Admission is **lazily materialized**: a dispatched group only actually
+trains at the first merge (or next dispatch) after it was handed out.
+The global is unchanged between merges, so this is semantically identical
+to training at dispatch time — and it is what makes the **parity fast
+path** exact: a merge consuming one full fresh dispatch (every slot, all
+arrived, staleness 0, nothing else resident) dispatches the *literal*
+resident-round program ``round.flat_round`` — same program, same inputs,
+bit-equal to ``run_rounds`` by construction (the scratch c_buf's values
+are never a program input there).  ``tests/test_async_round.py`` pins
+this, including malicious cohorts.
+
+Simulated time comes from the source (``repro.sim``): the engine is a
+deterministic event loop over (dispatch, arrival, deadline) events, so a
+(seed, trace) pair replays bit-for-bit and the benchmark can gate
+throughput ratios on simulated time.
+
+Sharding: the slot pool lives in the whole-row P("data")
+``cohort_sharding`` layout between programs (NOT the resident 2-D layout
+— see ``sharding.cohort.async_admit_shardings`` for why), so the merge's
+aggregation tail lowers exactly like the resident round: zero all-gathers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import flat
+from repro.core import round as round_mod
+from repro.core.fedfa import STRATEGIES
+from repro.core.server import (ClientSpec, FLConfig, cohort_update,
+                               default_class_masks, stack_runtimes)
+from repro.models.masks import full_client
+from repro.sharding import cohort as cohort_sh
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Slot-pool / staleness policy for the async engine.
+
+    capacity       fixed number of real client slots in the pool
+    merge_k        merge as soon as this many rows have arrived
+                   (1 = fully async FedAsync-style; capacity = full-pool)
+    staleness_max  rows older than this many global versions are DROPPED
+                   (their influence is exactly zero — the bound)
+    deadline       merge whatever has arrived after this much simulated
+                   time since the last merge (inf = count-triggered only)
+    discount       staleness weight shape: "rsqrt" (1/sqrt(1+s), FedBuff's
+                   default) or "const" (1 up to the bound)
+    retry_dt       simulated-time step while starved (no clients, none in
+                   flight); max_retries consecutive starved steps raise.
+    """
+    capacity: int = 8
+    merge_k: int = 4
+    staleness_max: int = 4
+    deadline: float = float("inf")
+    discount: str = "rsqrt"
+    retry_dt: float = 1.0
+    max_retries: int = 1000
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if not 1 <= self.merge_k <= self.capacity:
+            raise ValueError(
+                f"merge_k must be in [1, capacity={self.capacity}], "
+                f"got {self.merge_k}")
+        if self.staleness_max < 0:
+            raise ValueError("staleness_max must be >= 0")
+        if self.discount not in ("rsqrt", "const"):
+            raise ValueError(f"unknown discount {self.discount!r}")
+
+    @classmethod
+    def parity(cls, capacity: int) -> "AsyncConfig":
+        """The parity-mode policy: full-pool merges, zero tolerated
+        staleness, no deadline — with a full-cohort deterministic source
+        (``sim.ParitySource``) every merge takes the fast path and the run
+        is bit-equal to ``run_rounds``."""
+        return cls(capacity=capacity, merge_k=capacity, staleness_max=0,
+                   deadline=float("inf"))
+
+
+def staleness_weight(s, acfg: AsyncConfig) -> np.ndarray:
+    """(…,) staleness discount: w(0) = 1, decaying per ``acfg.discount``,
+    exactly 0 beyond ``staleness_max`` (the bounded-staleness cutoff).
+    Applied multiplicatively to ``n_data`` so stale clients keep their
+    data-size weighting but lose influence with age."""
+    s = np.asarray(s, np.float64)
+    base = 1.0 / np.sqrt(1.0 + s) if acfg.discount == "rsqrt" \
+        else np.ones_like(s)
+    return np.where(s <= acfg.staleness_max, base, 0.0).astype(np.float32)
+
+
+def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
+                       *, any_malicious: bool, mesh=None, rows: int):
+    """Build (or fetch) the jitted admit program for one pool shape:
+
+      (g_buf (N,), c_buf (rows, N), masks, gates, cms, mal, batches,
+       keys, slots (rows,) int32) -> (c_buf' (rows, N), losses (rows,))
+
+    Trains the dispatch group (padded to ``rows``) against the CURRENT
+    global and scatters its updates into the pool at ``slots``; pad
+    entries point at index ``rows`` (out of bounds) and are dropped, so
+    untouched pool rows pass through.  c_buf is donated (admissions
+    ping-pong one allocation); g_buf is NOT (the merge donates it).
+    Cached in ``round._ROUND_CACHE`` alongside the resident programs.
+    """
+    key = ("admit", index, cfg, round_mod._fl_static(fl),
+           bool(any_malicious), round_mod._mesh_key(mesh), rows)
+    fn = round_mod._ROUND_CACHE.get(key)
+    if fn is not None:
+        round_mod._ROUND_CACHE.move_to_end(key)
+        return fn
+
+    def _admit(g_buf, c_buf, masks, gates, cms, mal, batches, keys, slots):
+        g = flat.unflatten(index, g_buf)
+        updated, losses = cohort_update(
+            g, cfg, fl, masks, gates, batches, cms, mal, keys,
+            any_malicious=any_malicious)
+        x = cohort_sh.constrain_cohort(
+            flat.flatten_stacked(index, updated), mesh)
+        c_new = c_buf.at[slots].set(x, mode="drop")
+        return cohort_sh.constrain_cohort(c_new, mesh), losses
+
+    jit_kw = {}
+    if mesh is not None:
+        jit_kw["in_shardings"], jit_kw["out_shardings"] = \
+            cohort_sh.async_admit_shardings(mesh)
+    fn = jax.jit(_admit, donate_argnums=(1,), **jit_kw)
+    round_mod._ROUND_CACHE[key] = fn
+    while len(round_mod._ROUND_CACHE) > round_mod._ROUND_CACHE_MAX:
+        round_mod._ROUND_CACHE.popitem(last=False)
+    return fn
+
+
+def make_merge_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
+                       *, mesh=None, rows: int):
+    """Build (or fetch) the jitted merge program:
+
+      (g_buf (N,), c_buf (rows, N), masks, gates, gmaps, w (rows,))
+        -> g_buf' (N,)
+
+    ``flat.aggregate_buffers`` over the whole pool with the per-row
+    staleness-discounted weights ``w`` as the ``nd`` argument — free /
+    unarrived / over-stale rows carry w = 0 and are inert in grafting, the
+    trimmed norms and α, exactly like mesh pad rows.  g_buf is donated;
+    the pool buffer is read-only so in-flight rows survive the merge.
+    """
+    key = ("merge", index, cfg, round_mod._fl_static(fl),
+           round_mod._mesh_key(mesh), rows)
+    fn = round_mod._ROUND_CACHE.get(key)
+    if fn is not None:
+        round_mod._ROUND_CACHE.move_to_end(key)
+        return fn
+    kw = STRATEGIES[fl.strategy]
+
+    def _merge(g_buf, c_buf, masks, gates, gmaps, w):
+        x = cohort_sh.constrain_cohort(c_buf, mesh)
+        return flat.aggregate_buffers(
+            index, g_buf, x, cfg, masks, gates, gmaps, w, trim=fl.trim,
+            use_kernel=fl.use_kernel, interpret=fl.interpret, mesh=mesh,
+            **kw)
+
+    jit_kw = {}
+    if mesh is not None:
+        jit_kw["in_shardings"], jit_kw["out_shardings"] = \
+            cohort_sh.async_merge_shardings(mesh)
+    fn = jax.jit(_merge, donate_argnums=(0,), **jit_kw)
+    round_mod._ROUND_CACHE[key] = fn
+    while len(round_mod._ROUND_CACHE) > round_mod._ROUND_CACHE_MAX:
+        round_mod._ROUND_CACHE.popitem(last=False)
+    return fn
+
+
+class SlotPool:
+    """Host-side bookkeeping for the (rows, N) device pool.
+
+    ``capacity`` real slots; rows with id >= capacity are the mesh pad
+    rows — permanently free, never dispatched into, always weight 0.
+    """
+
+    def __init__(self, capacity: int, rows: int):
+        self.capacity, self.rows = int(capacity), int(rows)
+        self.occupied = np.zeros(rows, bool)
+        self.arrival = np.full(rows, np.inf)
+        self.version = np.zeros(rows, np.int64)
+        self.nd = np.zeros(rows, np.float32)
+        self.loss = np.full(rows, np.nan, np.float32)
+        self.specs: List[Optional[ClientSpec]] = [None] * rows
+
+    def free_slots(self) -> np.ndarray:
+        return np.flatnonzero(~self.occupied[:self.capacity])
+
+    def ready(self, now: float) -> np.ndarray:
+        return self.occupied & (self.arrival <= now)
+
+    def admit(self, slots: np.ndarray, specs: Sequence[ClientSpec],
+              latencies: np.ndarray, now: float, version: int) -> None:
+        self.occupied[slots] = True
+        self.arrival[slots] = now + np.asarray(latencies, np.float64)
+        self.version[slots] = version
+        self.nd[slots] = [float(s.n_data) for s in specs]
+        self.loss[slots] = np.nan
+        for i, s in zip(slots, specs):
+            self.specs[int(i)] = s
+
+    def release(self, mask: np.ndarray) -> None:
+        self.occupied[mask] = False
+        self.arrival[mask] = np.inf
+        self.nd[mask] = 0.0
+        for i in np.flatnonzero(mask):
+            self.specs[int(i)] = None
+
+
+class AsyncEngine:
+    """Deterministic event loop over (dispatch, arrival, deadline) events.
+
+    Construct with the flattened global buffer, then drive ``step()`` until
+    enough merges happened (``run_async`` does this).  Host state only —
+    all device work goes through the admit / merge / parity programs.
+
+    ``on_merge`` (optional) receives a host-side snapshot dict per merge
+    ({"x", "w", "specs", "g_before", "g_after", "loss"}, rows aligned) —
+    the differential oracle re-aggregates it with the tree engine.
+    """
+
+    def __init__(self, g_buf: jax.Array, cfg: ArchConfig, fl: FLConfig,
+                 index: flat.FlatIndex, source: Callable, key, *,
+                 acfg: AsyncConfig, mesh=None,
+                 on_merge: Optional[Callable[[dict], None]] = None):
+        self.cfg, self.fl, self.index, self.mesh = cfg, fl, index, mesh
+        self.source, self.key, self.acfg = source, key, acfg
+        self.on_merge = on_merge
+        self.rows = acfg.capacity + cohort_sh.pad_rows(acfg.capacity, mesh)
+        self.pool = SlotPool(acfg.capacity, self.rows)
+        self.g_buf = g_buf
+        self._c_buf: Optional[jax.Array] = None
+        # simulated clock + counters (the benchmark gates on `now`)
+        self.now = 0.0
+        self.version = 0          # bumps once per successful merge
+        self.dispatch_idx = 0
+        self.last_merge_t = 0.0
+        self.merges = 0
+        self.merged_rows = 0
+        self.dropped_rows = 0     # over-stale rows whose influence was 0
+        self._pending = None      # latest un-materialized dispatch group
+        self._retries = 0
+        self._pad_spec = ClientSpec(arch=full_client(cfg), n_data=0)
+
+    # -- event loop --------------------------------------------------------
+
+    def step(self) -> Optional[float]:
+        """Advance by one event; returns the merge's mean loss when this
+        step merged, else None."""
+        free = self.pool.free_slots()
+        if free.size:
+            res = self.source(self.dispatch_idx, self.now, int(free.size))
+            if res is not None and len(res[0]) > 0:
+                self._dispatch(free, *res)
+                return None
+        ready = self.pool.ready(self.now)
+        n_ready = int(ready.sum())
+        deadline_t = self.last_merge_t + self.acfg.deadline
+        if n_ready >= self.acfg.merge_k or \
+                (self.now >= deadline_t and n_ready >= 1):
+            return self._merge(ready)
+        if self.now >= deadline_t:
+            # deadline fired over an empty ready set: re-arm, not a merge
+            self.last_merge_t = self.now
+            return None
+        # advance simulated time to the next event
+        inflight = self.pool.occupied & (self.pool.arrival > self.now)
+        targets = []
+        if inflight.any():
+            targets.append(float(self.pool.arrival[inflight].min()))
+        if np.isfinite(self.acfg.deadline) and self.pool.occupied.any():
+            targets.append(deadline_t)
+        if targets:
+            self.now = max(self.now, min(targets))
+            self._retries = 0
+            return None
+        # nothing in flight and the source had nothing: starved
+        self._retries += 1
+        if self._retries > self.acfg.max_retries:
+            raise RuntimeError(
+                f"async engine starved: source produced no clients for "
+                f"{self._retries} consecutive retries (sim t={self.now:g})")
+        self.now += self.acfg.retry_dt
+        return None
+
+    def _dispatch(self, free: np.ndarray, specs, batches, latencies) -> None:
+        b = len(specs)
+        if b > free.size:
+            raise ValueError(
+                f"source returned {b} clients for {free.size} free slots")
+        slots = free[:b]
+        # a dispatch group trains lazily at the first merge after it was
+        # handed out; a SECOND dispatch before that merge materializes the
+        # first (both train against the same global version, so order
+        # within the inter-merge window is irrelevant)
+        self._materialize()
+        gkey = jax.random.fold_in(self.key, self.dispatch_idx)
+        self._pending = (slots, list(specs), batches, gkey)
+        self.pool.admit(slots, specs, np.asarray(latencies, np.float64),
+                        self.now, self.version)
+        self.dispatch_idx += 1
+        self._retries = 0
+
+    # -- device programs ---------------------------------------------------
+
+    def _ensure_cbuf(self) -> None:
+        c = self._c_buf
+        if c is None or c.is_deleted() or c.shape[0] != self.rows:
+            c = jnp.zeros((self.rows, self.index.n_padded), jnp.float32)
+            if self.mesh is not None:
+                c = jax.device_put(c,
+                                   cohort_sh.cohort_sharding(self.mesh))
+            self._c_buf = c
+
+    def _materialize(self) -> None:
+        """Run the admit program for the pending dispatch group (if any):
+        train it against the current global and scatter into its slots."""
+        if self._pending is None:
+            return
+        slots, specs, batches, gkey = self._pending
+        self._pending = None
+        b = len(specs)
+        runtimes = stack_runtimes(self.cfg, specs)
+        pad = self.rows - b
+        if pad:
+            runtimes, batches = cohort_sh.pad_cohort(runtimes, batches, pad)
+        masks, gates, _gmaps, _nd, cms, mal = runtimes
+        cms_in = default_class_masks(cms, self.cfg, self.fl, self.rows)
+        # host-side per-client keys, real rows only (pad rows reuse key 0) —
+        # matches flat_round so parity dispatches consume identical bits
+        keys = jax.random.split(gkey, b)
+        if pad:
+            keys = jnp.concatenate(
+                [keys, jnp.broadcast_to(keys[:1],
+                                        (pad,) + keys.shape[1:])])
+        slot_map = np.full((self.rows,), self.rows, np.int32)  # pads -> OOB
+        slot_map[:b] = slots
+        fn = make_admit_program(
+            self.cfg, self.fl, self.index,
+            any_malicious=any(s.malicious for s in specs),
+            mesh=self.mesh, rows=self.rows)
+        self._ensure_cbuf()
+        self._c_buf, losses = fn(self.g_buf, self._c_buf, masks, gates,
+                                 cms_in, mal, batches, keys,
+                                 jnp.asarray(slot_map))
+        self.pool.loss[slots] = np.asarray(losses)[:b]
+
+    def _merge(self, ready: np.ndarray) -> Optional[float]:
+        pool, acfg = self.pool, self.acfg
+        if self._pending is not None:
+            slots, specs, batches, gkey = self._pending
+            if (len(specs) == pool.capacity
+                    and bool(ready[slots].all())
+                    and int(pool.occupied.sum()) == pool.capacity
+                    and bool((pool.version[slots] == self.version).all())):
+                return self._merge_parity(slots, specs, batches, gkey)
+        self._materialize()
+        s = self.version - pool.version          # (rows,) staleness
+        keep = ready & (s <= acfg.staleness_max)
+        overstale = ready & ~keep
+        if not keep.any():
+            # every arrived row exceeded the bound: drop them (influence
+            # exactly 0), re-arm the deadline — NOT a merge
+            self.dropped_rows += int(overstale.sum())
+            pool.release(overstale)
+            self.last_merge_t = self.now
+            return None
+        w = np.zeros(self.rows, np.float32)
+        w[keep] = pool.nd[keep] * staleness_weight(s[keep], acfg)
+        slot_specs = [pool.specs[i] if pool.occupied[i] else self._pad_spec
+                      for i in range(self.rows)]
+        masks, gates, gmaps, _nd, _cms, _mal = \
+            stack_runtimes(self.cfg, slot_specs)
+        fn = make_merge_program(self.cfg, self.fl, self.index,
+                                mesh=self.mesh, rows=self.rows)
+        g_prev = np.asarray(self.g_buf) if self.on_merge else None
+        self._ensure_cbuf()
+        self.g_buf = fn(self.g_buf, self._c_buf, masks, gates, gmaps,
+                        jnp.asarray(w))
+        loss = float(np.nanmean(pool.loss[keep]))
+        if self.on_merge:
+            self.on_merge({"x": np.asarray(self._c_buf), "w": w.copy(),
+                           "specs": slot_specs, "g_before": g_prev,
+                           "g_after": np.asarray(self.g_buf), "loss": loss})
+        self.merged_rows += int(keep.sum())
+        self.dropped_rows += int(overstale.sum())
+        pool.release(ready)                      # over-stale rows too
+        self.version += 1
+        self.merges += 1
+        self.last_merge_t = self.now
+        return loss
+
+    def _merge_parity(self, slots, specs, batches, gkey) -> float:
+        """Parity fast path: this merge consumes exactly one full fresh
+        dispatch (every slot, all arrived, staleness 0, nothing else in
+        the pool) — dispatch the LITERAL resident-round program, which is
+        bit-equal to ``run_rounds`` by construction (same cached program,
+        same inputs; the scratch c_buf's values are not a program input)."""
+        pool = self.pool
+        self._pending = None
+        g_prev = np.asarray(self.g_buf) if self.on_merge else None
+        runtimes = stack_runtimes(self.cfg, specs)
+        self.g_buf, self._c_buf, loss = round_mod.flat_round(
+            self.g_buf, self._c_buf, self.cfg, self.fl, self.index,
+            runtimes, batches, gkey,
+            any_malicious=any(s.malicious for s in specs), mesh=self.mesh)
+        lossf = float(loss)
+        if self.on_merge:
+            # flat_round orders rows by spec; in the parity flow slots are
+            # exactly [0..capacity) so rows align with the general path
+            w = np.zeros(self.rows, np.float32)
+            w[np.asarray(slots)] = [float(s.n_data) for s in specs]
+            slot_specs = list(specs) + \
+                [self._pad_spec] * (self.rows - len(specs))
+            self.on_merge({"x": np.asarray(self._c_buf), "w": w,
+                           "specs": slot_specs, "g_before": g_prev,
+                           "g_after": np.asarray(self.g_buf),
+                           "loss": lossf})
+        self.merged_rows += len(specs)
+        pool.release(pool.occupied.copy())
+        self.version += 1
+        self.merges += 1
+        self.last_merge_t = self.now
+        return lossf
+
+
+def run_async(global_params: Params, cfg: ArchConfig, fl: FLConfig,
+              merges: int, source: Callable, key, *,
+              acfg: Optional[AsyncConfig] = None, eval_every: int = 5,
+              eval_fn: Optional[Callable[[int, float, Params], None]] = None,
+              ckpt_path: Optional[str] = None, mesh=None,
+              on_merge: Optional[Callable[[dict], None]] = None
+              ) -> Tuple[Params, List[float]]:
+    """Drive the async engine until ``merges`` merges completed.
+
+    ``source(dispatch_idx, sim_time, k)`` supplies arriving clients (see
+    ``repro.sim.source``).  Eval/checkpoint fire at the shared
+    ``round.eval_boundary`` merge indices; losses are per-merge means over
+    the rows actually merged, converted to host floats as they happen.
+    Returns (final params tree, per-merge losses).  ``merges <= 0`` is a
+    clean no-op, like ``run_rounds``.
+    """
+    if merges <= 0:
+        return global_params, []
+    acfg = acfg or AsyncConfig()
+    index = flat.get_index(global_params,
+                           pad_to=cohort_sh.model_shards(mesh))
+    g_buf = flat.flatten(index, global_params)
+    if mesh is not None:
+        g_buf = jax.device_put(g_buf, cohort_sh.global_sharding(mesh))
+    eng = AsyncEngine(g_buf, cfg, fl, index, source, key, acfg=acfg,
+                      mesh=mesh, on_merge=on_merge)
+    losses: List[float] = []
+    # belt-and-braces bound on non-merging steps (true starvation already
+    # raises inside step(); this catches policy livelocks)
+    max_steps = (merges + 1) * (acfg.max_retries + 16 * (eng.rows + 2))
+    steps = 0
+    while eng.merges < merges:
+        loss = eng.step()
+        steps += 1
+        if steps > max_steps:
+            raise RuntimeError(
+                f"async engine made only {eng.merges}/{merges} merges in "
+                f"{steps} steps — policy livelock?")
+        if loss is None:
+            continue
+        r = eng.merges - 1
+        losses.append(loss)
+        if round_mod.eval_boundary(r, merges, eval_every):
+            if eval_fn is not None:
+                eval_fn(r, loss, flat.unflatten(index, eng.g_buf))
+            if ckpt_path is not None:
+                from repro.checkpoint import checkpoint as ckpt_mod
+                ckpt_mod.save_from_buffer(
+                    f"{ckpt_path}_m{r:05d}", index, eng.g_buf,
+                    meta={"merge": r, "strategy": fl.strategy,
+                          "sim_time": eng.now})
+    return flat.unflatten(index, eng.g_buf), losses

@@ -42,6 +42,23 @@ layout by a communication-free local slice.  The aggregation path lowers
 with zero all-gathers; ``flat.unflatten`` re-gathers the global buffer
 only at eval/checkpoint boundaries.  The donated ping-pong of the two
 buffers is unchanged (matching in/out shardings keep XLA aliasing them).
+
+Slot-pool / donation contract (shared with ``repro.core.async_round``):
+the (m, N) cohort scratch is a **slot pool** — m fixed rows whose content
+is meaningful only where the per-row weight (``n_data``, or the async
+engine's staleness-discounted weight) is positive; zero-weight rows are
+inert in every reduction and in α, which is what makes partial cohorts,
+mesh padding and partially-filled async pools exact.  The buffer's
+*values* are never an input to a round program (``keep_unused=True``
+keeps it a parameter solely so XLA aliases its allocation to the new
+stacked-updates output), so any (m, N) f32 buffer of the right sharding
+can be donated in, and the returned buffer must be treated as consumed
+scratch: hand it back to the next program that writes all of its live
+rows (the resident round overwrites every row; the async admit program
+scatters into its dispatch slots and preserves the rest).  Per cohort
+shape there is exactly ONE live scratch buffer — ``ResidentDriver`` keys
+its pool on the PADDED row count so cohorts that pad to the same shape
+ping-pong one allocation.
 """
 from __future__ import annotations
 
@@ -72,6 +89,17 @@ def _fl_static(fl: FLConfig) -> Tuple:
     so the compiled-program cache keys on a value snapshot)."""
     return (fl.strategy, fl.lr, fl.task, fl.trim, fl.attack_lambda,
             fl.use_kernel, fl.interpret)
+
+
+def eval_boundary(r: int, rounds: int, eval_every: int) -> bool:
+    """True on rounds where eval/checkpoint fire: every ``eval_every``
+    rounds AND on the final round; ``eval_every <= 0`` means final round
+    only.  Note the predicate deliberately fires at r = 0 (``0 % k == 0``)
+    so a fresh run logs a baseline point before any training signal —
+    callers that want training-only curves should skip r = 0 themselves.
+    One shared helper so the resident driver, the async engine and the
+    per-round loop in ``launch.train`` cannot drift."""
+    return (eval_every > 0 and r % eval_every == 0) or r == rounds - 1
 
 
 def _mesh_key(mesh) -> Optional[Tuple]:
@@ -191,9 +219,16 @@ def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
 
 
 class ResidentDriver:
-    """Multi-round driver state: the FlatIndex, per-m scratch cohort buffers,
-    the optional mesh, and the donated round programs (via the module
-    cache)."""
+    """Multi-round driver state: the FlatIndex, per-shape scratch cohort
+    buffers, the optional mesh, and the donated round programs (via the
+    module cache).
+
+    The scratch pool is keyed on the PADDED row count (``m +
+    sharding.cohort.pad_rows(m, mesh)``) — the shape the buffer actually
+    has — not the raw cohort size: under a mesh, distinct real sizes that
+    pad to the same row count must ping-pong ONE allocation (keying on
+    ``len(specs)`` held a separate, never-donated buffer per real size and
+    kept dead donated buffers referenced)."""
 
     def __init__(self, cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                  mesh=None):
@@ -205,11 +240,17 @@ class ResidentDriver:
         """Run one round on the resident buffer: (g_buf', mean loss)."""
         runtimes = stack_runtimes(self.cfg, specs)
         m = len(specs)
+        m_rows = m + cohort_sh.pad_rows(m, self.mesh)
         g_buf, c_buf, loss = flat_round(
-            g_buf, self._cbufs.get(m), self.cfg, self.fl, self.index,
+            g_buf, self._cbufs.get(m_rows), self.cfg, self.fl, self.index,
             runtimes, batches, key, mesh=self.mesh,
             any_malicious=any(s.malicious for s in specs))
-        self._cbufs[m] = c_buf
+        self._cbufs[m_rows] = c_buf
+        # evict entries whose buffer was donated elsewhere (e.g. handed to
+        # the async engine) — a deleted jax.Array is dead weight that would
+        # otherwise stay referenced forever
+        for k in [k for k, v in self._cbufs.items() if v.is_deleted()]:
+            del self._cbufs[k]
         return g_buf, loss
 
 
@@ -227,10 +268,11 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
     The per-round key is ``jax.random.fold_in(key, r)`` (same as the
     per-round path, so the two drivers are loss-parity comparable).
 
-    eval_fn(r, mean_loss, params_tree) runs at ``eval_every`` boundaries and
-    on the final round (``eval_every <= 0``: final round only); with
-    ckpt_path set, a checkpoint is written from the resident buffer at the
-    same boundaries (``checkpoint.save_from_buffer``).
+    eval_fn(r, mean_loss, params_tree) runs at ``eval_boundary`` rounds
+    (every ``eval_every`` rounds including r = 0, plus the final round;
+    ``eval_every <= 0``: final round only); with ckpt_path set, a
+    checkpoint is written from the resident buffer at the same boundaries
+    (``checkpoint.save_from_buffer``).
     Returns (final params tree, per-round mean losses).  ``rounds <= 0``
     returns the input params untouched without flattening or compiling
     anything, so scripted sweeps can no-op cleanly.
@@ -245,13 +287,20 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
         # place the global buffer on its model-sharded layout up front so
         # the first round's donation isn't defeated by an implicit reshard
         g_buf = jax.device_put(g_buf, cohort_sh.global_sharding(mesh))
-    losses: List[jax.Array] = []
+    # losses convert to host floats INCREMENTALLY, one round behind the
+    # dispatch (converting round r-1 while round r is in flight keeps the
+    # async-dispatch pipeline full but pins at most ONE device scalar,
+    # instead of retaining all R per-round device arrays until the end)
+    losses: List[float] = []
+    pending_loss: Optional[jax.Array] = None
     for r in range(rounds):
         specs, batches = data_fn(r)
         g_buf, loss = driver.round(g_buf, specs, batches,
                                    jax.random.fold_in(key, r))
-        losses.append(loss)
-        if (eval_every > 0 and r % eval_every == 0) or r == rounds - 1:
+        if pending_loss is not None:
+            losses.append(float(pending_loss))
+        pending_loss = loss
+        if eval_boundary(r, rounds, eval_every):
             if eval_fn is not None:
                 eval_fn(r, float(loss), flat.unflatten(index, g_buf))
             if ckpt_path is not None:
@@ -259,4 +308,5 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
                 ckpt_mod.save_from_buffer(
                     f"{ckpt_path}_r{r:05d}", index, g_buf,
                     meta={"round": r, "strategy": fl.strategy})
-    return flat.unflatten(index, g_buf), [float(l) for l in losses]
+    losses.append(float(pending_loss))
+    return flat.unflatten(index, g_buf), losses

@@ -11,7 +11,6 @@ runs unsharded.
 """
 from __future__ import annotations
 
-import functools
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -95,11 +94,29 @@ def stack_runtimes(cfg: ArchConfig, specs: Sequence[ClientSpec]):
     return masks, gates, gmaps, nd, cms, mal
 
 
-@functools.lru_cache(maxsize=8)
+# constant across rounds — cached so the resident round path doesn't
+# re-allocate an (m, V) device array every round.  A plain dict (not
+# lru_cache) keyed ALSO on the active backend, with deleted-array checks:
+# a process-global lru_cache leaked stale-backend device arrays across
+# forced-device-count subprocesses and mesh teardowns.
+_MASK_CACHE: Dict[Tuple[int, int, str], jax.Array] = {}
+
+
 def _ones_class_masks(m: int, vocab: int) -> jax.Array:
-    # constant across rounds — cached so the resident round path doesn't
-    # re-allocate an (m, V) device array every round
-    return jnp.ones((m, vocab), jnp.float32)
+    key = (m, vocab, jax.default_backend())
+    hit = _MASK_CACHE.get(key)
+    if hit is None or hit.is_deleted():
+        hit = _MASK_CACHE[key] = jnp.ones((m, vocab), jnp.float32)
+    return hit
+
+
+def clear_runtime_caches() -> None:
+    """Drop every cached device array this module holds (the per-arch
+    runtime tuples and the all-ones class masks).  Test fixtures call this
+    between backend/mesh reconfigurations so arrays from a torn-down
+    backend can't leak into the next test."""
+    _MASK_CACHE.clear()
+    _RUNTIME_CACHE.clear()
 
 
 def default_class_masks(cms: Optional[jax.Array], cfg: ArchConfig,
@@ -210,7 +227,8 @@ def make_client_specs(cfg: ArchConfig, n_clients: int, *,
                       seed: int = 0) -> List[ClientSpec]:
     """Half the clients take the smallest architecture (paper §5.1), the
     rest get the supplied (e.g. NAS-chosen) architectures; attackers use the
-    largest architecture (paper §3.1)."""
+    largest architecture (paper §3.1).  ``n_data_range`` is INCLUSIVE on
+    both ends — the paper's 100-250 samples means 250 is drawable."""
     rng = np.random.default_rng(seed)
     smallest = min(archs, key=lambda a: (a.width_mult, sum(a.section_depths)))
     n_mal = int(round(malicious_frac * n_clients))
@@ -226,7 +244,7 @@ def make_client_specs(cfg: ArchConfig, n_clients: int, *,
             arch = archs[int(rng.integers(len(archs)))]
         specs.append(ClientSpec(
             arch=arch,
-            n_data=int(rng.integers(*n_data_range)),
+            n_data=int(rng.integers(*n_data_range, endpoint=True)),
             malicious=i in mal_ids,
             class_mask=None if class_masks is None else class_masks[i]))
     return specs

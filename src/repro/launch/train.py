@@ -89,7 +89,10 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
            eval_every: int = 5, task: str = "cls",
            width_mults=(0.25, 0.5, 0.75, 1.0),
            arch_mode: str = "width", agg_engine: str = "flat",
-           driver: str = "resident", mesh: Optional[str] = None,
+           driver: str = "resident", merge_k: int = 0,
+           staleness_max: int = 4,
+           async_deadline: float = float("inf"),
+           mesh: Optional[str] = None,
            use_kernel: Optional[bool] = None,
            interpret: bool = False, ckpt: Optional[str] = None,
            quiet: bool = False) -> dict:
@@ -189,18 +192,18 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
                   f"loss {loss:.4f} global_acc {acc:.3f} "
                   f"local_acc {lacc:.3f}", flush=True)
 
-    if driver == "resident" and agg_engine != "flat":
+    if driver in ("resident", "async") and agg_engine != "flat":
         if not quiet:
-            print("resident driver is flat-native; falling back to the "
+            print(f"{driver} driver is flat-native; falling back to the "
                   "per-round driver for agg_engine=tree", flush=True)
         driver = "per-round"
 
     from repro.launch.mesh import get_mesh
     mesh_obj = get_mesh(mesh)
-    if mesh_obj is not None and driver != "resident":
+    if mesh_obj is not None and driver not in ("resident", "async"):
         if not quiet:
-            print("--mesh shards the resident driver's cohort axis; the "
-                  "per-round driver runs unsharded", flush=True)
+            print("--mesh shards the resident/async drivers' cohort axis; "
+                  "the per-round driver runs unsharded", flush=True)
         mesh_obj = None
 
     if driver == "resident":
@@ -208,13 +211,42 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
         params, _ = run_rounds(params, cfg, fl, rounds, round_data, key,
                                eval_every=eval_every, eval_fn=record_eval,
                                ckpt_path=ckpt, mesh=mesh_obj)
+    elif driver == "async":
+        # continuous arrivals from the trace-driven population simulator:
+        # clients keep their round_data specs/batches, but WHEN they arrive
+        # comes from hashed device-class latency/availability traces, and
+        # merges fire on merge_k arrivals or the deadline (rounds counts
+        # MERGES here, so histories line up with the sync drivers)
+        from repro.core.async_round import AsyncConfig, run_async
+        from repro.sim import ClientPopulation, PopulationSource
+        population = ClientPopulation(n_clients, seed=seed)
+        capacity = max(1, int(round(participation * n_clients)))
+
+        def batch_fn(d, ids):
+            batches_np = pipeline.round_batches_cls(
+                parts, ids, n_classes, cfg.vocab_size,
+                local_steps=local_steps, batch=batch, seq_len=seq_len,
+                profiles=profiles, seed=seed * 1000 + d)
+            return {k: jnp.asarray(v) for k, v in batches_np.items()}
+
+        source = PopulationSource(
+            population, lambda ids: [specs[int(i)] for i in ids], batch_fn)
+        acfg = AsyncConfig(
+            capacity=capacity,
+            merge_k=merge_k if merge_k > 0 else max(1, capacity // 2),
+            staleness_max=staleness_max, deadline=async_deadline)
+        params, _ = run_async(params, cfg, fl, rounds, source, key,
+                              acfg=acfg, eval_every=eval_every,
+                              eval_fn=record_eval, ckpt_path=ckpt,
+                              mesh=mesh_obj)
     else:
         from repro.checkpoint import checkpoint as ckpt_mod
+        from repro.core.round import eval_boundary
         for r in range(rounds):
             sel_specs, batches = round_data(r)
             params, loss = fl_round(params, cfg, fl, sel_specs, batches,
                                     jax.random.fold_in(key, r))
-            if (eval_every > 0 and r % eval_every == 0) or r == rounds - 1:
+            if eval_boundary(r, rounds, eval_every):
                 record_eval(r, float(loss), params)
                 if ckpt is not None:
                     ckpt_mod.save(f"{ckpt}_r{r:05d}", params,
@@ -253,10 +285,22 @@ def main() -> None:
     ap.add_argument("--agg-engine", choices=["flat", "tree"], default="flat",
                     help="flat: the production engine; tree: slower "
                          "test-only differential oracle, kept for debugging")
-    ap.add_argument("--driver", choices=["resident", "per-round"],
+    ap.add_argument("--driver", choices=["resident", "async", "per-round"],
                     default="resident",
                     help="resident: one jitted round program with donated "
-                         "(N,)/(m,N) buffers; per-round: re-dispatch each round")
+                         "(N,)/(m,N) buffers; async: continuous-arrival "
+                         "slot pool with bounded-staleness merges "
+                         "(--rounds counts merges); per-round: re-dispatch "
+                         "each round")
+    ap.add_argument("--merge-k", type=int, default=0,
+                    help="async: merge when this many updates arrived "
+                         "(0 = half the pool capacity)")
+    ap.add_argument("--staleness-max", type=int, default=4,
+                    help="async: drop updates staler than this many "
+                         "global versions")
+    ap.add_argument("--async-deadline", type=float, default=float("inf"),
+                    help="async: merge whatever arrived after this much "
+                         "simulated time since the last merge")
     ap.add_argument("--mesh", choices=["none", "host", "production"],
                     default="none",
                     help="shard the resident round over the mesh: client "
@@ -288,6 +332,9 @@ def main() -> None:
                      arch_mode=args.arch_mode, task=args.task,
                      eval_every=args.eval_every,
                      agg_engine=args.agg_engine, driver=args.driver,
+                     merge_k=args.merge_k,
+                     staleness_max=args.staleness_max,
+                     async_deadline=args.async_deadline,
                      mesh=args.mesh_shape or args.mesh,
                      use_kernel={"auto": None, "on": True,
                                  "off": False}[args.use_kernel],

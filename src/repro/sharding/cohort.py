@@ -127,6 +127,45 @@ def round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
     return ((gl, cb, co, co, co, co, co, co, co, co), (gl, cb, rep))
 
 
+def async_admit_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """(in_shardings, out_shardings) for the async engine's admit program
+
+      (g_buf, c_buf, masks, gates, cms, mal, batches, keys, slots)
+        -> (c_buf', losses)
+
+    (``repro.core.async_round.make_admit_program``).  The slot-pool c_buf
+    stays in the whole-row P("data") ``cohort_sharding`` layout — NOT the
+    resident 2-D P("data", "model") layout — because the admit scatter
+    writes whole rows at data-replicated slot indices and the merge's
+    trimmed-norm pass reads whole (client, segment) rows; re-slicing N
+    between admits would force an all-gather back to whole rows inside the
+    merge's aggregation, breaking the zero-all-gather invariant the
+    benchmarks gate.  (A distributed quantile would lift this — ROADMAP
+    follow-up.)  Dispatch-stacked training arguments shard over ``data``
+    like the resident round; the (rows,) slot map is replicated (every
+    data shard needs the full scatter destination set).
+    """
+    co, rep, gl = cohort_sharding(mesh), replicated(mesh), \
+        global_sharding(mesh)
+    return ((gl, co, co, co, co, co, co, co, rep), (co, co))
+
+
+def async_merge_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """(in_shardings, out_shardings) for the async engine's merge program
+
+      (g_buf, c_buf, masks, gates, gmaps, w) -> g_buf'
+
+    (``repro.core.async_round.make_merge_program``).  The slot pool arrives
+    already in the whole-row P("data") layout the aggregation consumes
+    (see ``async_admit_shardings``), so the merge lowers exactly like the
+    resident round's aggregation tail: reduce-scatter + N/n_model psum,
+    zero all-gathers.  g_buf keeps the resident P("model") layout on both
+    sides so XLA aliases the donated pair.
+    """
+    co, gl = cohort_sharding(mesh), global_sharding(mesh)
+    return ((gl, co, co, co, co, co), gl)
+
+
 def constrain_cohort(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
     """Pin a client-stacked intermediate to the cohort sharding.
 

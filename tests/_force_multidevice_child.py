@@ -26,6 +26,12 @@ the 2x2 mesh and asserts the reduce-scattered structure: ZERO all-gathers,
 >= 1 reduce-scatter, no N-sized all-reduce, and every N-scale all-reduce
 exactly N/2 (per-device volume ~N/n_model).  Prints ``AGG COLLECTIVES 2D
 OK``.
+
+With ``--async`` it runs the async engine under the 4-device data mesh:
+parity-mode bit-equality with the sharded ``run_rounds`` (fedfa +
+heterofl), skewed-trace bounded-staleness merges, zero all-gathers in the
+lowered merge program, and the ``ResidentDriver._cbufs`` padded-key
+regression.  Prints ``ASYNC OK``.
 """
 import sys
 
@@ -209,6 +215,86 @@ if "--two-d" in sys.argv:
     print("2d checkpoint roundtrip: OK")
 
     print("TWO-D OK")
+    sys.exit(0)
+
+
+if "--async" in sys.argv:
+    import jax.numpy as jnp
+
+    from repro.core.async_round import AsyncConfig, run_async
+    from repro.sim import ParitySource, TraceSource
+
+    # --- async parity under the 4-device data mesh: the fast path
+    # dispatches the SAME sharded resident program run_rounds uses, so the
+    # two drivers must be bit-equal even on the padded uneven cohort
+    for strategy in ("fedfa", "heterofl"):
+        fl = _fl(strategy)
+        p_sync, l_sync = round_mod.run_rounds(PARAMS, CFG, fl, 2, data_fn,
+                                              KEY, eval_every=0, mesh=MESH)
+        p_async, l_async = run_async(PARAMS, CFG, fl, 2,
+                                     ParitySource(data_fn), KEY,
+                                     acfg=AsyncConfig.parity(M),
+                                     eval_every=0, mesh=MESH)
+        assert l_sync == l_async, (l_sync, l_async)
+        for a, b in zip(jax.tree.leaves(p_sync), jax.tree.leaves(p_async)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print(f"async sharded parity {strategy}: OK")
+
+    # --- general path under the mesh: skewed trace, capacity 3 pads to 4
+    # pool rows, partial staleness-bearing merges; admit scatter + merge
+    # aggregation run sharded and keep training signal finite
+    fl = _fl("fedfa")
+    lat = lambda i: 30.0 if i % 3 == 2 else 1.0 + (i % 2)
+    p, losses = run_async(PARAMS, CFG, fl, 4, TraceSource(data_fn, lat),
+                          KEY, acfg=AsyncConfig(capacity=3, merge_k=2,
+                                                staleness_max=3),
+                          eval_every=0, mesh=MESH)
+    assert len(losses) == 4 and all(np.isfinite(losses)), losses
+    for leaf in jax.tree.leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
+    print("async sharded general path: OK")
+
+    # --- merge program collective structure: the bounded-staleness merge
+    # aggregates the whole-row P("data") pool with ZERO all-gathers (the
+    # invariant the slot-pool layout decision preserves)
+    from repro.core.async_round import make_merge_program
+    from repro.sharding import collectives as coll
+    index = flat.get_index(PARAMS)
+    rows = 4
+    masks, gates, gmaps, _, _, _ = stack_runtimes(CFG, SPECS + SPECS[:1])
+    g = jax.device_put(flat.flatten(index, PARAMS), csh.replicated(MESH))
+    c = jax.device_put(jnp.zeros((rows, index.n), jnp.float32),
+                       csh.cohort_sharding(MESH))
+    w = jnp.asarray([5.0, 3.0, 0.0, 0.0], jnp.float32)
+    fl_k = FLConfig(local_steps=E, lr=0.05, strategy="fedfa", task="cls",
+                    agg_engine="flat", use_kernel=True, interpret=True)
+    fn = make_merge_program(CFG, fl_k, index, mesh=MESH, rows=rows)
+    txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
+    n_gather = coll.count(txt, "all-gather")
+    assert n_gather == 0, \
+        f"{n_gather} all-gather(s) in the async merge aggregation"
+    print("async merge collectives: all-gather=0 OK")
+
+    # --- _cbufs regression: under the mesh, m=3 and m=4 cohorts both pad
+    # to 4 rows and must ping-pong ONE scratch allocation (the old code
+    # keyed on len(specs) and held a dead buffer per real size)
+    driver = round_mod.ResidentDriver(CFG, fl, index, mesh=MESH)
+    g_buf = jax.device_put(flat.flatten(index, PARAMS),
+                           csh.global_sharding(MESH))
+    _, batches3 = data_fn(0)
+    g_buf, _ = driver.round(g_buf, SPECS, batches3, KEY)
+    cbuf_first = driver._cbufs[4]
+    specs4, data_fn4 = make_cohort(CFG, 4, local_steps=E)
+    _, batches4 = data_fn4(0)
+    g_buf, _ = driver.round(g_buf, specs4, batches4, KEY)
+    assert len(driver._cbufs) == 1, \
+        f"expected one scratch buffer for padded m=4, got {driver._cbufs.keys()}"
+    assert cbuf_first.is_deleted(), \
+        "m=4 cohort did not donate the m=3 cohort's padded scratch buffer"
+    assert not driver._cbufs[4].is_deleted()
+    print("cbufs padded-key ping-pong: OK")
+
+    print("ASYNC OK")
     sys.exit(0)
 
 

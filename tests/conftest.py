@@ -12,6 +12,17 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _clear_runtime_caches():
+    """Drop core.server's cached device arrays when the session ends so
+    arrays from a torn-down backend never leak into a later backend/mesh
+    reconfiguration (the forced-device-count subprocess tests re-import in
+    a fresh process, but in-process mesh tests share this one)."""
+    yield
+    from repro.core.server import clear_runtime_caches
+    clear_runtime_caches()
+
+
 def tiny(name: str, **over):
     """Reduced config for a registered arch with optional overrides."""
     from repro.configs import get_arch

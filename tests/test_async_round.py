@@ -1,0 +1,204 @@
+"""Async engine: parity bit-equality, staleness policy, slot-pool state.
+
+The correctness anchor is ``test_parity_bit_equal``: the async engine in
+parity mode (full-pool merges, staleness 0, deterministic full-cohort
+arrivals) must be BIT-equal to ``run_rounds`` — same losses, same params —
+because every parity merge dispatches the literal resident-round program.
+The staleness tests pin the bounded-influence guarantee: an over-stale
+malicious update is dropped (weight exactly 0), a within-bound stale one
+is discounted below its fresh weight.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import fl_round_fixture, make_cohort
+
+from repro.core import flat
+from repro.core.async_round import (AsyncConfig, AsyncEngine, SlotPool,
+                                    run_async, staleness_weight)
+from repro.core.round import run_rounds
+from repro.core.server import FLConfig
+from repro.sim import ParitySource, TraceSource
+
+CFG, PARAMS = fl_round_fixture()
+M, E = 4, 2
+KEY = jax.random.PRNGKey(7)
+
+
+def _fl(strategy):
+    return FLConfig(local_steps=E, lr=0.05, strategy=strategy, task="cls",
+                    agg_engine="flat")
+
+
+@pytest.mark.parametrize("strategy", ["fedfa", "heterofl"])
+def test_parity_bit_equal(strategy):
+    """Parity mode (staleness 0, full cohort, deterministic trace) is
+    BIT-equal to run_rounds — losses and final params — including a
+    malicious cohort."""
+    specs, data_fn = make_cohort(CFG, M, local_steps=E, malicious_frac=0.3)
+    assert any(s.malicious for s in specs)
+    fl = _fl(strategy)
+    p_sync, l_sync = run_rounds(PARAMS, CFG, fl, 3, data_fn, KEY,
+                                eval_every=0)
+    p_async, l_async = run_async(PARAMS, CFG, fl, 3, ParitySource(data_fn),
+                                 KEY, acfg=AsyncConfig.parity(M),
+                                 eval_every=0)
+    assert l_sync == l_async          # host floats, exact
+    for a, b in zip(jax.tree.leaves(p_sync), jax.tree.leaves(p_async)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staleness_weight():
+    acfg = AsyncConfig(capacity=4, merge_k=2, staleness_max=3)
+    w = staleness_weight(np.arange(6), acfg)
+    assert w[0] == 1.0                              # fresh: full weight
+    assert np.all(np.diff(w[:4]) < 0)               # strictly decaying
+    np.testing.assert_allclose(w[:4], 1.0 / np.sqrt(1.0 + np.arange(4)),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(w[4:], 0.0)       # beyond the bound: zero
+    const = AsyncConfig(capacity=4, merge_k=2, staleness_max=3,
+                        discount="const")
+    np.testing.assert_array_equal(staleness_weight(np.arange(6), const),
+                                  [1, 1, 1, 1, 0, 0])
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        AsyncConfig(capacity=0)
+    with pytest.raises(ValueError):
+        AsyncConfig(capacity=4, merge_k=5)
+    with pytest.raises(ValueError):
+        AsyncConfig(capacity=4, merge_k=0)
+    with pytest.raises(ValueError):
+        AsyncConfig(discount="linear")
+
+
+def test_slot_pool_state():
+    pool = SlotPool(capacity=3, rows=4)             # 1 mesh pad row
+    assert list(pool.free_slots()) == [0, 1, 2]     # pad row never free-listed
+    from repro.core.server import ClientSpec
+    from repro.models.masks import full_client
+    spec = ClientSpec(arch=full_client(CFG), n_data=10)
+    pool.admit(np.asarray([0, 2]), [spec, spec], np.asarray([1.0, 5.0]),
+               now=0.0, version=0)
+    assert list(pool.free_slots()) == [1]
+    np.testing.assert_array_equal(pool.ready(1.0), [True, False, False, False])
+    np.testing.assert_array_equal(pool.ready(5.0), [True, False, True, False])
+    pool.release(pool.ready(1.0))
+    assert list(pool.free_slots()) == [0, 1]
+    assert pool.nd[0] == 0.0 and pool.specs[0] is None
+
+
+def _straggler_engine(staleness_max, merges, rec):
+    """capacity-2 engine over a stream whose malicious client is a
+    straggler: it arrives ~8 sim-seconds in, by which time ~7 fast merges
+    bumped the version, so its staleness far exceeds a small bound."""
+    specs, data_fn = make_cohort(CFG, M, local_steps=E, malicious_frac=0.3,
+                                 seed=1)
+    mal = [i for i, s in enumerate(specs) if s.malicious]
+    assert mal, "cohort must include an attacker"
+    lat = lambda i: 8.0 if specs[i % M].malicious else 1.0
+    fl = _fl("fedfa")
+    index = flat.get_index(PARAMS)
+    g_buf = flat.flatten(index, PARAMS)
+    eng = AsyncEngine(
+        g_buf, CFG, fl, index, TraceSource(data_fn, lat), KEY,
+        acfg=AsyncConfig(capacity=2, merge_k=1,
+                         staleness_max=staleness_max),
+        on_merge=rec.append)
+    while eng.merges < merges:
+        eng.step()
+    return eng
+
+
+def test_stale_malicious_influence_bounded():
+    """Over-stale malicious updates are DROPPED (weight exactly 0, never
+    merged); within-bound stale ones merge with a discounted weight
+    strictly below their fresh n_data weight."""
+    rec = []
+    eng = _straggler_engine(staleness_max=1, merges=10, rec=rec)
+    # the straggler arrived over-stale at least once and was dropped
+    assert eng.dropped_rows >= 1
+    for info in rec:                  # ... and NEVER merged with weight > 0
+        for i, s in enumerate(info["specs"]):
+            if s.malicious:
+                assert info["w"][i] == 0.0
+
+    # generous bound: the straggler now merges, but discounted
+    rec2 = []
+    eng2 = _straggler_engine(staleness_max=1000, merges=10, rec=rec2)
+    mal_ws = [(info["w"][i], float(s.n_data))
+              for info in rec2 for i, s in enumerate(info["specs"])
+              if s.malicious and info["w"][i] > 0]
+    assert mal_ws, "straggler never merged under the generous bound"
+    for w, nd in mal_ws:
+        assert 0.0 < w < nd           # discounted strictly below fresh
+    assert eng2.dropped_rows == 0     # nothing exceeds the generous bound
+
+
+def test_skewed_trace_progresses():
+    """Partial bounded-staleness merges on a skewed trace still train:
+    per-merge losses stay finite and the engine's simulated clock moves at
+    the fast clients' cadence, not the straggler's."""
+    specs, data_fn = make_cohort(CFG, M, local_steps=E)
+    lat = lambda i: 40.0 if i % M == M - 1 else 1.0 + (i % 3)
+    rec = []
+    p, losses = run_async(PARAMS, CFG, _fl("fedfa"), 5,
+                          TraceSource(data_fn, lat), KEY,
+                          acfg=AsyncConfig(capacity=4, merge_k=2,
+                                           staleness_max=3),
+                          eval_every=0, on_merge=rec.append)
+    assert len(losses) == 5 and all(np.isfinite(losses))
+    assert len(rec) == 5
+    # every merge consumed >= merge_k rows' worth of weight
+    assert all(np.count_nonzero(info["w"]) >= 1 for info in rec)
+    for leaf in jax.tree.leaves(p):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_run_async_noop():
+    p, losses = run_async(PARAMS, CFG, _fl("fedfa"), 0,
+                          ParitySource(lambda r: ([], {})), KEY,
+                          acfg=AsyncConfig.parity(1))
+    assert losses == [] and p is PARAMS
+
+
+def test_population_traces_deterministic():
+    """The hashed client population replays bit-for-bit and stays cheap at
+    millions of registered clients (no per-client state)."""
+    from repro.sim import DEFAULT_CLASSES, ClientPopulation
+    pop = ClientPopulation(2_000_000, seed=3)
+    ids = np.asarray([0, 1, 42, 1_999_999])
+    np.testing.assert_array_equal(pop.device_class(ids),
+                                  pop.device_class(ids))
+    np.testing.assert_array_equal(pop.latency(ids, nonce=5),
+                                  pop.latency(ids, nonce=5))
+    assert (pop.latency(ids, nonce=5) > 0).all()
+    assert not np.array_equal(pop.latency(ids, nonce=5),
+                              pop.latency(ids, nonce=6))   # redraw per dispatch
+    # class shares roughly follow the weights over a large id sample
+    big = np.arange(20_000)
+    shares = np.bincount(pop.device_class(big),
+                         minlength=len(DEFAULT_CLASSES)) / big.size
+    np.testing.assert_allclose(
+        shares, [c.weight for c in DEFAULT_CLASSES], atol=0.02)
+    # cohorts: distinct, available, deterministic in (t, nonce)
+    c1 = pop.sample_cohort(16, t=100.0, nonce=2)
+    c2 = pop.sample_cohort(16, t=100.0, nonce=2)
+    np.testing.assert_array_equal(c1, c2)
+    assert len(set(c1.tolist())) == len(c1)
+    assert pop.available(c1, 100.0).all()
+
+
+def test_starvation_raises():
+    """A source that never produces clients raises instead of spinning."""
+    fl = _fl("fedfa")
+    index = flat.get_index(PARAMS)
+    eng = AsyncEngine(flat.flatten(index, PARAMS), CFG, fl, index,
+                      lambda d, t, k: None, KEY,
+                      acfg=AsyncConfig(capacity=2, merge_k=1,
+                                       max_retries=5))
+    with pytest.raises(RuntimeError, match="starved"):
+        for _ in range(100):
+            eng.step()

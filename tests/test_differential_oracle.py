@@ -98,6 +98,45 @@ if HAVE_HYPOTHESIS:
         _check_parity(seed, strategy)
 
 
+def test_async_merges_match_tree_oracle():
+    """Every async merge (parity fast path AND general bounded-staleness
+    path, malicious straggler included) re-aggregated by the tree engine
+    from the engine's own host snapshot — slot rows, staleness-discounted
+    weights, per-row specs — must reproduce the merged global."""
+    from conftest import assert_tree_allclose, make_cohort
+
+    from repro.core.async_round import AsyncConfig, run_async
+    from repro.core.server import FLConfig, stack_runtimes
+    from repro.sim import ParitySource, TraceSource
+
+    fl = FLConfig(local_steps=2, lr=0.05, strategy="fedfa", task="cls",
+                  agg_engine="flat")
+    index = flat.get_index(PARAMS)
+    specs, data_fn = make_cohort(CFG, 4, local_steps=2, malicious_frac=0.3)
+    key = jax.random.PRNGKey(3)
+    rec = []
+    # skewed trace -> partial, staleness-bearing merges (general path)
+    run_async(PARAMS, CFG, fl, 3,
+              TraceSource(data_fn, lambda i: 20.0 if i % 4 == 3 else 1.0),
+              key, acfg=AsyncConfig(capacity=4, merge_k=2, staleness_max=3),
+              eval_every=0, on_merge=rec.append)
+    # full-cohort trace -> parity fast path merges
+    run_async(PARAMS, CFG, fl, 2, ParitySource(data_fn), key,
+              acfg=AsyncConfig.parity(4), eval_every=0, on_merge=rec.append)
+    assert len(rec) == 5
+    kw = fedfa.STRATEGIES[fl.strategy]
+    for info in rec:
+        g_before = flat.unflatten(index, jnp.asarray(info["g_before"]))
+        rows = [flat.unflatten(index, jnp.asarray(r)) for r in info["x"]]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        masks, gates, gmaps, _, _, _ = stack_runtimes(CFG, info["specs"])
+        out_tree = fedfa.aggregate(g_before, stacked, CFG, masks, gates,
+                                   gmaps, jnp.asarray(info["w"]),
+                                   engine="tree", **kw)
+        assert_tree_allclose(out_tree,
+                             flat.unflatten(index, jnp.asarray(info["g_after"])))
+
+
 @pytest.mark.parametrize("seed", range(3))
 def test_kernelized_cohort_norms_match_reference(seed):
     """The fused Pallas trimmed-norm pass (use_kernel=True, interpret=True:

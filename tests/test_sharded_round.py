@@ -179,6 +179,15 @@ def test_agg_collectives_2d_forced_multidevice():
     assert "AGG COLLECTIVES 2D OK" in out
 
 
+def test_async_forced_multidevice():
+    """Async engine on 4 forced CPU devices: parity-mode bit-equality with
+    the sharded run_rounds (fedfa + heterofl, uneven malicious cohort),
+    skewed-trace bounded-staleness merges, zero all-gathers in the merge
+    program, and the ResidentDriver._cbufs padded-key regression (m=3 and
+    m=4 cohorts ping-pong one padded scratch allocation)."""
+    assert "ASYNC OK" in _run_forced_multidevice_child("--async")
+
+
 # ---------------------------------------------------------------------------
 # N-padding (host-side, no mesh needed)
 # ---------------------------------------------------------------------------
