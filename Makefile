@@ -1,13 +1,19 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async
+.PHONY: tier1 check lint analysis bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
 
 check:            ## tier-1 tests + resident/sharded round smoke benches (CI gate)
 	$(PY) benchmarks/run.py --check
+
+lint:             ## FL-specific AST source lints over src/
+	$(PY) -m repro.analysis lint src/
+
+analysis:         ## program-contract check: lower the canonical program set, print the contract table
+	$(PY) -m repro.analysis check
 
 bench-round:      ## resident vs per-round driver, m in {4,16,64} -> BENCH_round.json
 	$(PY) benchmarks/bench_round.py

@@ -111,8 +111,8 @@ def _merge_all_gathers(cfg, fl, params, specs, rows):
     from repro.core.async_round import make_merge_program
     from repro.core.server import stack_runtimes
     from repro.launch.mesh import make_data_mesh
+    from repro.analysis import hlo
     from repro.sharding import cohort as csh
-    from repro.sharding import collectives as coll
 
     mesh = make_data_mesh()
     index = flat.get_index(params, pad_to=csh.model_shards(mesh))
@@ -127,7 +127,7 @@ def _merge_all_gathers(cfg, fl, params, specs, rows):
                            "interpret": True})
     fn = make_merge_program(cfg, fl_k, index, mesh=mesh, rows=rows)
     txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
-    return coll.count(txt, "all-gather")
+    return hlo.count(txt, "all-gather")
 
 
 def _run_async_traced(cfg, fl, params, data_fn, lat, m, merges,

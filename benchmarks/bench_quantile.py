@@ -28,57 +28,15 @@ import os
 import sys
 import time
 
-# layout/dtype plumbing, not memory passes in a fused XLA program
-_LAYOUT_PRIMS = {"reshape", "broadcast_in_dim", "squeeze", "transpose",
-                 "convert_element_type", "copy", "slice"}
-_SORT_PRIMS = {"sort", "top_k", "approx_top_k"}
-
-
-def _sub_jaxprs(eqn):
-    import jax
-    out = []
-    for v in eqn.params.values():
-        for u in (v if isinstance(v, (list, tuple)) else [v]):
-            if isinstance(u, jax.extend.core.ClosedJaxpr):
-                out.append(u.jaxpr)
-            elif isinstance(u, jax.extend.core.Jaxpr):
-                out.append(u)
-    return out
-
-
-def _walk_counts(jaxpr, row_elems):
-    """(row_reads, sorts) over a jaxpr: compute eqns with a row-block-sized
-    operand, recursing through call-like eqns.  A pallas_call counts as ONE
-    read and is not recursed into — its inner jaxpr is VMEM-resident work,
-    which is exactly the fusion being measured."""
-    reads = sorts = 0
-    for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
-        rowsized = any(
-            getattr(v, "aval", None) is not None and v.aval.size == row_elems
-            for v in eqn.invars)
-        if name == "pallas_call":
-            reads += bool(rowsized)
-            continue
-        subs = _sub_jaxprs(eqn)
-        if subs:
-            for s in subs:
-                r, k = _walk_counts(s, row_elems)
-                reads += r
-                sorts += k
-            continue
-        if name in _SORT_PRIMS:
-            sorts += 1
-        if rowsized and name not in _LAYOUT_PRIMS:
-            reads += 1
-    return reads, sorts
-
 
 def _structural(m, R, L, trim=0.95):
     """Trace both paths of the flat engine's per-leaf trimmed-norm pass on
-    one (m, R, L) row block and count row reads / sorts."""
+    one (m, R, L) row block and count row reads / sorts — via the shared
+    jaxpr visitor in ``repro.analysis.jaxpr`` (its pallas_call-is-one-read
+    convention is the fusion being measured)."""
     import jax
     import jax.numpy as jnp
+    from repro.analysis import jaxpr as jaxpr_mod
     from repro.core import flat
 
     rows = jax.random.normal(jax.random.PRNGKey(0), (m, R, L), jnp.float32)
@@ -95,9 +53,8 @@ def _structural(m, R, L, trim=0.95):
 
     out = {}
     for name, fn in (("topk", topk), ("fused", fused)):
-        jaxpr = jax.make_jaxpr(fn)(rows, q)
-        reads, sorts = _walk_counts(jaxpr.jaxpr, rows.size)
-        out[name] = {"row_reads": reads, "sorts": sorts}
+        c = jaxpr_mod.trace_counts(fn, rows, q, row_elems=rows.size)
+        out[name] = {"row_reads": c.reads, "sorts": c.sorts}
     return out
 
 
@@ -139,9 +96,9 @@ def _wall(index, xm, fracs, iters, use_kernel, interpret):
 def _collectives(index, xm, fracs, mesh):
     """Lower + compile the kernelized pass under the mesh; count collectives."""
     import jax
+    from repro.analysis import hlo as coll
     from repro.core import flat
     from repro.sharding import cohort as csh
-    from repro.sharding import collectives as coll
 
     fn = jax.jit(lambda x, f: flat._cohort_norms(
         index, x, f, 0.95, True, True, mesh=mesh))

@@ -100,8 +100,8 @@ def _collectives(cfg, fl, params, specs, batches, mesh):
     this must stay <= n_padded: the global-model broadcast).
     """
     import jax
+    from repro.analysis import hlo
     from repro.core.round import make_flat_round
-    from repro.sharding import collectives as coll
 
     (index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal, bpad),
      g, c) = _mesh_inputs(cfg, fl, params, specs, batches, mesh,
@@ -112,18 +112,14 @@ def _collectives(cfg, fl, params, specs, batches, mesh):
     txt = fn.lower(g, c, masks, gates, gmaps, nd, cms_in, mal, bpad,
                    keys).compile().as_text()
 
-    counts = Counter()
-    full_gathers = psums = max_gather = 0
-    for kind, elems in coll.collective_lines(txt):
-        counts[kind] += 1
-        if elems is None:
-            continue
-        if kind == "all-gather":
-            max_gather = max(max_gather, elems)
-            if elems >= mp * index.n_padded:
-                full_gathers += 1
-        if kind == "all-reduce" and elems == index.n_padded:
-            psums += 1
+    ops = hlo.collectives(txt)
+    counts = Counter(op.kind for op in ops)
+    gathers = [op.elems for op in ops
+               if op.kind == "all-gather" and op.elems is not None]
+    full_gathers = sum(1 for e in gathers if e >= mp * index.n_padded)
+    max_gather = max(gathers, default=0)
+    psums = sum(1 for op in ops
+                if op.kind == "all-reduce" and op.elems == index.n_padded)
     return dict(counts), full_gathers, psums, max_gather
 
 
@@ -136,9 +132,9 @@ def _agg_collectives(cfg, fl, params, specs, batches, mesh):
     with model shards these must all be exactly n_padded/model_shards.
     """
     import jax
+    from repro.analysis import hlo
     from repro.core import flat
     from repro.sharding import cohort as csh
-    from repro.sharding import collectives as coll
 
     (index, _, mp, (masks, gates, gmaps, nd, _, _, _), g, _) = _mesh_inputs(
         cfg, fl, params, specs, batches, mesh)
@@ -150,8 +146,8 @@ def _agg_collectives(cfg, fl, params, specs, batches, mesh):
         mesh=mesh), out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
     scale = index.n_padded // csh.model_shards(mesh)
-    return (coll.count(txt, "all-gather"), coll.count(txt, "reduce-scatter"),
-            coll.sizes(txt, "all-reduce", min_elems=scale))
+    return (hlo.count(txt, "all-gather"), hlo.count(txt, "reduce-scatter"),
+            hlo.sizes(txt, "all-reduce", min_elems=scale))
 
 
 def main() -> None:

@@ -159,6 +159,15 @@ def check() -> None:
         ("async-engine smoke bench (4 forced CPU devices)",
          [sys.executable, os.path.join(root, "benchmarks", "bench_async.py"),
           "--smoke", "--min-ratio", "1.3"], shard_env),
+        # program-contract check: every declared Contract (round, agg,
+        # async admit/merge, quantile) evaluated on freshly lowered
+        # programs, plus the cache-key / recompile-audit passes
+        ("program-contract check (4 forced CPU devices)",
+         [sys.executable, "-m", "repro.analysis", "check", "--quiet"],
+         shard_env),
+        ("FL source lints",
+         [sys.executable, "-m", "repro.analysis", "lint",
+          os.path.join(root, "src")], env),
     ]
     for name, cmd, step_env in steps:
         print(f"== {name}: {' '.join(cmd)}", flush=True)

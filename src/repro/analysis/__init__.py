@@ -1,0 +1,19 @@
+"""repro.analysis — static analysis for compiled FL round programs.
+
+Three layers (see ``README.md`` in this directory):
+
+  * ``hlo`` / ``jaxpr`` — the ONE copy of the HLO-text and jaxpr parsing
+    rules (typed ``CollectiveOp`` records, donation-alias parsing, the
+    read/sort jaxpr visitor);
+  * ``contracts`` — declarative ``Contract`` objects that programs
+    declare next to their builders and every gate site evaluates;
+  * ``passes`` / ``lint`` — runtime-adjacent checks (donation, recompile
+    auditing, cache hygiene) and FL-specific AST source lints.
+
+CLI: ``python -m repro.analysis check`` (lower the canonical program set
+under forced multi-device meshes and print the full contract table) and
+``python -m repro.analysis lint src/``.
+"""
+from repro.analysis import hlo, jaxpr, lint, passes  # noqa: F401
+from repro.analysis.contracts import (Bound, Contract, Report,  # noqa: F401
+                                      format_table)

@@ -1,0 +1,272 @@
+"""Declarative program contracts checked against lowered/compiled programs.
+
+A ``Contract`` states the *structural* invariants a compiled round program
+must satisfy — zero all-gathers on the aggregation path, reduce-scattered
+(M', γ) sums with per-device all-reduce volume <= N/n_model, donation
+aliases materialized, the fused quantile reading each cohort row exactly
+once — as data, not as ad-hoc asserts.  Programs declare their contract
+next to their builder (``core/round.py::round_contract``,
+``core/async_round.py::admit_contract``/``merge_contract``,
+``kernels/fedfa_agg/ops.py::accumulate_contract``,
+``kernels/fedfa_quantile/ops.py::fused_quantile_contract``), and every
+gate site — benchmarks, the forced-multidevice test child, and
+``python -m repro.analysis check`` — evaluates the same objects.
+
+Count-valued fields take a ``Bound``: an exact int, a ``(lo, hi)`` tuple
+(either end None for open), or None for unchecked.  HLO fields are
+measured on ``compiled.as_text()`` via ``repro.analysis.hlo``; jaxpr
+fields on a traced jaxpr via ``repro.analysis.jaxpr``; ``donated`` on the
+compiled module's ``input_output_alias`` header.
+
+This module is dependency-light on purpose (stdlib + the sibling
+``hlo``/``jaxpr`` modules, no jax import at module scope): the program
+modules in ``repro.core`` and ``repro.kernels`` import it at module load
+to declare their contracts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.analysis import hlo as hlo_mod
+
+Bound = Union[int, Tuple[Optional[int], Optional[int]], None]
+
+
+def check_bound(name: str, value: int, bound: Bound) -> Optional[str]:
+    """Violation message (or None) for ``value`` against ``bound``."""
+    if bound is None:
+        return None
+    if isinstance(bound, int):
+        if value != bound:
+            return f"{name} == {value}, expected exactly {bound}"
+        return None
+    lo, hi = bound
+    if lo is not None and value < lo:
+        return f"{name} == {value}, expected >= {lo}"
+    if hi is not None and value > hi:
+        return f"{name} == {value}, expected <= {hi}"
+    return None
+
+
+def _fmt_bound(bound: Bound) -> str:
+    if isinstance(bound, int):
+        return f"=={bound}"
+    lo, hi = bound
+    if lo is None:
+        return f"<={hi}"
+    if hi is None:
+        return f">={lo}"
+    return f"in[{lo},{hi}]"
+
+
+@dataclass(frozen=True)
+class Contract:
+    """Structural contract of one compiled/traced program.
+
+    HLO collective structure (measured on ``compiled.as_text()``):
+      all_gathers / reduce_scatters / all_to_alls / collective_permutes
+                       Bound on the op count (async pairs count once).
+      allreduce_max_elems
+                       No all-reduce payload may exceed this many elements
+                       (the per-device-volume cap: N/n_model with model
+                       shards, N on a data-only mesh).
+      scale_allreduces / scale_elems
+                       Bound on the number of all-reduces of EXACTLY
+                       ``scale_elems`` elements — the (M', γ) partial-sum
+                       reductions.  Independent of the cap so a program
+                       with uncapped training-side all-reduces can still
+                       pin its aggregation psum count.
+      full_cohort_gathers / cohort_elems
+                       Bound on all-gathers whose payload >= cohort_elems
+                       (materializing the full (m, N) cohort is the
+                       failure the sharded round exists to prevent).
+      max_all_gather_elems
+                       Largest tolerated all-gather payload (e.g. the <= N
+                       global-model broadcast into local training).
+
+    Donation (measured on the ``input_output_alias`` header):
+      donated          Parameter indices that must have materialized
+                       aliases — the resident ping-pong buffers.
+
+    Traced-program structure (measured on a jaxpr + ``row_elems``):
+      row_reads        Bound on compute ops consuming the row block.
+      sorts            Bound on sort/top_k ops.
+    """
+    name: str
+    description: str = ""
+    all_gathers: Bound = None
+    reduce_scatters: Bound = None
+    all_to_alls: Bound = None
+    collective_permutes: Bound = None
+    allreduce_max_elems: Optional[int] = None
+    scale_allreduces: Bound = None
+    scale_elems: Optional[int] = None
+    full_cohort_gathers: Bound = None
+    cohort_elems: Optional[int] = None
+    max_all_gather_elems: Optional[int] = None
+    donated: Optional[frozenset] = None
+    row_reads: Bound = None
+    sorts: Bound = None
+
+    def __post_init__(self):
+        if self.full_cohort_gathers is not None and self.cohort_elems is None:
+            raise ValueError(
+                f"contract {self.name!r}: full_cohort_gathers needs "
+                f"cohort_elems (the full-cohort payload size)")
+        if self.scale_allreduces is not None and self.scale_elems is None:
+            raise ValueError(
+                f"contract {self.name!r}: scale_allreduces needs "
+                f"scale_elems (the payload size it counts)")
+
+    # -- evaluation --------------------------------------------------------
+
+    def _needs_hlo(self) -> bool:
+        return any(getattr(self, f.name) is not None for f in fields(self)
+                   if f.name in ("all_gathers", "reduce_scatters",
+                                 "all_to_alls", "collective_permutes",
+                                 "allreduce_max_elems", "scale_allreduces",
+                                 "full_cohort_gathers",
+                                 "max_all_gather_elems", "donated"))
+
+    _SPEC_SKIP = ("name", "description", "cohort_elems", "scale_elems")
+
+    def _needs_jaxpr(self) -> bool:
+        return self.row_reads is not None or self.sorts is not None
+
+    def check(self, *, hlo: Optional[str] = None, jaxpr=None,
+              row_elems: Optional[int] = None) -> "Report":
+        """Evaluate the contract against a compiled-HLO text and/or a
+        traced jaxpr; returns a ``Report`` (ok + measured + violations)."""
+        measured: Dict[str, object] = {}
+        violations: List[str] = []
+
+        if self._needs_hlo():
+            if hlo is None:
+                violations.append("contract has HLO fields but no compiled "
+                                  "HLO text was provided")
+            else:
+                self._check_hlo(hlo, measured, violations)
+        if self._needs_jaxpr():
+            if jaxpr is None:
+                violations.append("contract has jaxpr fields but no jaxpr "
+                                  "was provided")
+            else:
+                self._check_jaxpr(jaxpr, row_elems, measured, violations)
+        if self.donated is not None and hlo is not None:
+            donated = set(hlo_mod.donated_params(hlo))
+            measured["donated"] = sorted(donated)
+            missing = set(self.donated) - donated
+            if missing:
+                violations.append(
+                    f"donation aliases missing for parameter(s) "
+                    f"{sorted(missing)} (materialized: {sorted(donated)})")
+        return Report(contract=self, measured=measured,
+                      violations=violations)
+
+    def _check_hlo(self, txt: str, measured, violations) -> None:
+        ops = hlo_mod.collectives(txt)
+        counters = (("all_gathers", "all-gather"),
+                    ("reduce_scatters", "reduce-scatter"),
+                    ("all_to_alls", "all-to-all"),
+                    ("collective_permutes", "collective-permute"))
+        for field, kind in counters:
+            n = hlo_mod.count(ops, kind)
+            measured[field] = n
+            v = check_bound(field, n, getattr(self, field))
+            if v:
+                violations.append(v)
+        ar_sizes = hlo_mod.sizes(ops, "all-reduce")
+        measured["all_reduces"] = len(ar_sizes)
+        if self.allreduce_max_elems is not None:
+            big = [e for e in ar_sizes if e > self.allreduce_max_elems]
+            measured["allreduce_max_elems"] = max(ar_sizes, default=0)
+            if big:
+                violations.append(
+                    f"all-reduce payload(s) {big} exceed "
+                    f"{self.allreduce_max_elems} elems")
+        if self.scale_allreduces is not None:
+            n_scale = sum(1 for e in ar_sizes if e == self.scale_elems)
+            measured["scale_allreduces"] = n_scale
+            v = check_bound("scale_allreduces", n_scale,
+                            self.scale_allreduces)
+            if v:
+                violations.append(v)
+        ag_max = hlo_mod.max_elems(ops, "all-gather")
+        measured["max_all_gather_elems"] = ag_max
+        if self.max_all_gather_elems is not None \
+                and ag_max > self.max_all_gather_elems:
+            violations.append(
+                f"all-gather of {ag_max} elems exceeds "
+                f"{self.max_all_gather_elems}")
+        if self.full_cohort_gathers is not None:
+            n_full = len(hlo_mod.sizes(ops, "all-gather",
+                                       min_elems=self.cohort_elems))
+            measured["full_cohort_gathers"] = n_full
+            v = check_bound("full_cohort_gathers", n_full,
+                            self.full_cohort_gathers)
+            if v:
+                violations.append(v)
+
+    def _check_jaxpr(self, jaxpr, row_elems, measured, violations) -> None:
+        from repro.analysis import jaxpr as jaxpr_mod
+        if self.row_reads is not None and row_elems is None:
+            violations.append("contract has row_reads but no row_elems "
+                              "was provided")
+            return
+        c = jaxpr_mod.walk(jaxpr, row_elems=row_elems)
+        measured["row_reads"] = c.reads
+        measured["sorts"] = c.sorts
+        for field, val in (("row_reads", c.reads), ("sorts", c.sorts)):
+            v = check_bound(field, val, getattr(self, field))
+            if v:
+                violations.append(v)
+
+    def spec(self) -> str:
+        """Compact one-line rendering of the declared bounds."""
+        parts = []
+        for f in fields(self):
+            if f.name in self._SPEC_SKIP:
+                continue
+            val = getattr(self, f.name)
+            if val is None:
+                continue
+            if f.name == "donated":
+                parts.append(f"donated={sorted(val)}")
+            elif f.name in ("allreduce_max_elems", "max_all_gather_elems"):
+                parts.append(f"{f.name}<={val}")
+            else:
+                parts.append(f"{f.name}{_fmt_bound(val)}")
+        return " ".join(parts)
+
+
+@dataclass
+class Report:
+    """One contract evaluation: measured values + violations."""
+    contract: Contract
+    measured: Dict[str, object]
+    violations: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def format_table(reports: Sequence[Report]) -> str:
+    """The one-table rendering ``python -m repro.analysis check`` prints:
+    program | declared contract | measured | PASS/FAIL (+ violations)."""
+    rows = [("program", "contract", "measured", "status")]
+    for r in reports:
+        meas = " ".join(f"{k}={v}" for k, v in sorted(r.measured.items()))
+        rows.append((r.contract.name, r.contract.spec(), meas,
+                     "PASS" if r.ok else "FAIL"))
+    widths = [max(len(row[i]) for row in rows) for i in range(4)]
+    lines = []
+    for i, row in enumerate(rows):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    for r in reports:
+        for v in r.violations:
+            lines.append(f"FAIL {r.contract.name}: {v}")
+    return "\n".join(lines)

@@ -1,0 +1,237 @@
+"""Structured HLO analysis: collective ops + donation aliases of a compiled
+program.
+
+This is the ONE copy of the HLO text-parsing rules (it absorbs the former
+``repro.sharding.collectives``): every gate that inspects a lowered round —
+``benchmarks/bench_shard.py``, ``bench_quantile.py``, ``bench_async.py``,
+``tests/_force_multidevice_child.py`` and the ``repro.analysis`` contract
+checker — goes through the typed records here, so the parsing conventions
+stay in lockstep everywhere the invariants are asserted.
+
+Parsing rules (see also ``repro/analysis/README.md``):
+
+  * An instruction line is ``%name = <result-shape> <op>(...)``.  Only the
+    canonical collective op names in ``KINDS`` are recognized, and the op
+    name must be immediately followed by ``(`` so ``metadata={op_name=...}``
+    strings and fusion-computation names never false-positive.
+  * **Async pairs**: TPU/GPU backends lower collectives as
+    ``<op>-start`` / ``<op>-done`` pairs.  The ``-start`` half carries the
+    shape and is recorded (``is_async=True``); the ``-done`` half is
+    skipped, so each op appears exactly once whether it lowered sync or
+    async.
+  * **Tuple-shaped results**: an async start may return a tuple — e.g.
+    ``(f32[1024]{0}, u32[])`` (payload + sync flag) or, for all-gather on
+    TPU, ``(f32[256], f32[1024])`` (operand, result).  The payload element
+    count is the MAX element count over the tuple's floating-point shapes
+    (falling back to max over all shapes when no float is present).  For
+    the gated kinds this never under-counts: all-reduce result == operand,
+    all-gather result >= operand.  Layout annotations (``{1,0:T(256)}``)
+    and an optional leading tuple are handled.
+  * ``replica_groups={{0,1},{2,3}}`` / iota ``[2,2]<=[4]`` forms are kept
+    verbatim on the record for replica-group-sensitive checks.
+
+Donation: the compiled module header carries
+``input_output_alias={ {out}: (param, {index}, kind) }`` — ``donated_params``
+parses it so contracts can assert the resident ping-pong buffers actually
+aliased (a silently-dropped donation doubles resident memory without
+changing results, which no numeric test catches).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_FLOAT_DTYPES = ("f64", "f32", "f16", "bf16", "f8e5m2", "f8e4m3fn")
+
+# dtype[dims]{optional layout} — dims empty for scalars (e.g. ``u32[]``)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\](?:\{[^}]*\})?")
+
+# ``= <result> <op>(``: result is a single shape or a tuple of shapes.
+# Tile annotations nest parens inside the layout braces ({1,0:T(256)}),
+# so the tuple branch must allow parens there while still stopping at the
+# tuple's own closing paren.
+_INSTR_RE = re.compile(
+    r"=\s*(?P<result>\((?:[^(){}]|\{[^{}]*\})*\)"
+    r"|[a-z][a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[a-z][a-z0-9-]*)\(")
+
+_REPLICA_RE = re.compile(r"replica_groups=(\{\{[\d,{}\s]*\}\}|\[[\d,]*\]<=\[\d+\])")
+
+# content nests braces one level deep ({out-index} and {param-index} tuples)
+_ALIAS_HDR_RE = re.compile(
+    r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{[\d,\s]*\}:\s*\(\s*(\d+)\s*,\s*\{[^}]*\}\s*,\s*(may-alias|must-alias)\)")
+
+
+@dataclass(frozen=True)
+class CollectiveOp:
+    """One collective op of a compiled program.
+
+    kind            canonical name (``all-reduce``, never ``-start``)
+    elems           payload element count (None if the line had no shape)
+    shapes          every (dtype, dims) of the result, tuple-flattened
+    is_async        lowered as a ``-start``/``-done`` pair
+    replica_groups  the verbatim ``replica_groups=`` value (None if absent)
+    line_no         1-based line in the HLO text (for error messages)
+    """
+    kind: str
+    elems: Optional[int]
+    shapes: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    is_async: bool
+    replica_groups: Optional[str]
+    line_no: int
+
+
+def _elems(dims: Tuple[int, ...]) -> int:
+    e = 1
+    for d in dims:
+        e *= d
+    return e
+
+
+def parse_shapes(text: str) -> Tuple[Tuple[str, Tuple[int, ...]], ...]:
+    """Every ``dtype[dims]`` shape token of an HLO fragment (layout
+    annotations stripped), as ((dtype, dims), ...)."""
+    return tuple(
+        (m.group(1), tuple(int(d) for d in m.group(2).split(",") if d))
+        for m in _SHAPE_RE.finditer(text))
+
+
+def payload_elems(shapes: Sequence[Tuple[str, Tuple[int, ...]]]
+                  ) -> Optional[int]:
+    """The collective's real payload element count from its (possibly
+    tuple-shaped) result: max over floating-point shapes, else max over all
+    shapes — never the blindly-first shape on the line (an async start's
+    ``u32[]`` sync flag, or a layout-annotated operand, may come first)."""
+    if not shapes:
+        return None
+    floats = [_elems(dims) for dt, dims in shapes if dt in _FLOAT_DTYPES]
+    if floats:
+        return max(floats)
+    return max(_elems(dims) for _, dims in shapes)
+
+
+def result_elems(line: str) -> Optional[int]:
+    """Payload element count of one HLO instruction line (None if
+    shapeless).  Tuple-shaped and layout-annotated results are handled —
+    the shapes are taken from the result (between ``=`` and the op name)
+    when the line parses as an instruction, else from the whole line."""
+    m = _INSTR_RE.search(line)
+    frag = m.group("result") if m else line
+    return payload_elems(parse_shapes(frag))
+
+
+def collectives(txt: str, strict: bool = False) -> List[CollectiveOp]:
+    """All collective ops of a compiled-HLO text, in program order.
+
+    Counts each op exactly once: sync ``<kind>(`` lines and async
+    ``<kind>-start(`` lines are recorded; ``-done`` halves are skipped.
+    With ``strict``, an unbalanced start/done count raises ValueError.
+    """
+    out: List[CollectiveOp] = []
+    starts: Dict[str, int] = {}
+    dones: Dict[str, int] = {}
+    for ln, line in enumerate(txt.splitlines(), start=1):
+        m = _INSTR_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        kind, is_async = op, False
+        if op.endswith("-start"):
+            kind, is_async = op[:-len("-start")], True
+        elif op.endswith("-done"):
+            base = op[:-len("-done")]
+            if base in KINDS:
+                dones[base] = dones.get(base, 0) + 1
+            continue
+        if kind not in KINDS:
+            continue
+        if is_async:
+            starts[kind] = starts.get(kind, 0) + 1
+        shapes = parse_shapes(m.group("result"))
+        rg = _REPLICA_RE.search(line)
+        out.append(CollectiveOp(kind=kind, elems=payload_elems(shapes),
+                                shapes=shapes, is_async=is_async,
+                                replica_groups=rg.group(1) if rg else None,
+                                line_no=ln))
+    if strict and starts != dones:
+        raise ValueError(
+            f"unbalanced async collective pairs: starts={starts} "
+            f"dones={dones}")
+    return out
+
+
+Source = Union[str, Sequence[CollectiveOp]]
+
+
+def _ops(src: Source) -> Sequence[CollectiveOp]:
+    return collectives(src) if isinstance(src, str) else src
+
+
+def collective_lines(txt: str) -> List[Tuple[str, Optional[int]]]:
+    """Back-compat view: [(kind, payload elems), ...]."""
+    return [(op.kind, op.elems) for op in collectives(txt)]
+
+
+def count(src: Source, kind: str) -> int:
+    """Number of ``kind`` collectives in an HLO text (or parsed op list)."""
+    return sum(1 for op in _ops(src) if op.kind == kind)
+
+
+def sizes(src: Source, kind: str, min_elems: int = 0) -> List[int]:
+    """Payload sizes of every ``kind`` op with >= min_elems elements."""
+    return [op.elems for op in _ops(src)
+            if op.kind == kind and op.elems is not None
+            and op.elems >= min_elems]
+
+
+def max_elems(src: Source, kind: str) -> int:
+    """Largest payload of any ``kind`` op (0 if none)."""
+    return max((op.elems for op in _ops(src)
+                if op.kind == kind and op.elems is not None), default=0)
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def result_bytes(op: CollectiveOp) -> int:
+    """Total result bytes of one collective (every shape of a tuple result,
+    unknown dtypes skipped) — the interconnect-traffic proxy the dry-run
+    roofline divides by ICI bandwidth."""
+    return sum(_elems(dims) * _DTYPE_BYTES[dt] for dt, dims in op.shapes
+               if dt in _DTYPE_BYTES)
+
+
+def byte_totals(src: Source) -> Dict[str, int]:
+    """{kind: summed result bytes} over every collective, plus ``total``."""
+    out: Dict[str, int] = {}
+    for op in _ops(src):
+        out[op.kind] = out.get(op.kind, 0) + result_bytes(op)
+    out["total"] = sum(out.values())
+    return out
+
+
+def summarize(src: Source) -> Dict[str, int]:
+    """{kind: count} over every collective kind present."""
+    out: Dict[str, int] = {}
+    for op in _ops(src):
+        out[op.kind] = out.get(op.kind, 0) + 1
+    return out
+
+
+def donated_params(txt: str) -> Dict[int, str]:
+    """{parameter number: alias kind} from the compiled module's
+    ``input_output_alias`` header — the donations XLA actually
+    materialized.  Empty when nothing aliased (donation silently dropped,
+    or none requested)."""
+    m = _ALIAS_HDR_RE.search(txt)
+    if m is None:
+        return {}
+    return {int(p): kind for p, kind in _ALIAS_ENTRY_RE.findall(m.group(1))}

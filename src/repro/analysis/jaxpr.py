@@ -1,0 +1,109 @@
+"""Reusable jaxpr visitor: per-operand reads, sorts, gathers and scatters.
+
+Generalizes the read/sort walk that used to live inline in
+``benchmarks/bench_quantile.py``: the fused trimmed-quantile invariant
+(each cohort row read exactly ONCE, zero sorts — vs the top_k tail path's
+7 reads and 1 sort) is a *traced-program* property, so it is measured on
+the jaxpr, not on timing.  ``repro.analysis.contracts.Contract`` consumes
+these counts via its ``row_reads``/``sorts`` fields.
+
+Counting rules:
+
+  * a **read** is a compute eqn with at least one operand of exactly
+    ``row_elems`` elements (the row block being measured); pure
+    layout/dtype plumbing (``LAYOUT_PRIMS``) is excluded — XLA fuses it
+    away, it is not a memory pass;
+  * a ``pallas_call`` counts as ONE read (when row-block-sized) and is NOT
+    recursed into: its inner jaxpr is VMEM-resident work, which is exactly
+    the fusion being measured;
+  * other call-like eqns (jit, custom_jvp, scan, shard_map, ...) are
+    recursed through transparently;
+  * **sorts** (``SORT_PRIMS``), **gathers** and **scatters** are counted
+    wherever they appear (except inside pallas_call, per the rule above),
+    regardless of operand size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional
+
+# layout/dtype plumbing, not memory passes in a fused XLA program
+LAYOUT_PRIMS = frozenset({
+    "reshape", "broadcast_in_dim", "squeeze", "transpose",
+    "convert_element_type", "copy", "slice"})
+SORT_PRIMS = frozenset({"sort", "top_k", "approx_top_k"})
+GATHER_PRIMS = frozenset({"gather", "dynamic_slice", "take"})
+SCATTER_PRIMS = frozenset({
+    "scatter", "scatter-add", "scatter-mul", "scatter-min", "scatter-max",
+    "dynamic_update_slice"})
+
+
+@dataclass
+class Counts:
+    """Aggregated op counts of one jaxpr walk."""
+    reads: int = 0
+    sorts: int = 0
+    gathers: int = 0
+    scatters: int = 0
+
+    def __iadd__(self, other: "Counts") -> "Counts":
+        self.reads += other.reads
+        self.sorts += other.sorts
+        self.gathers += other.gathers
+        self.scatters += other.scatters
+        return self
+
+
+def sub_jaxprs(eqn) -> List[Any]:
+    """Every sub-jaxpr held in an eqn's params (call-like eqns: jit, scan,
+    cond, custom_*, shard_map, pallas_call...)."""
+    import jax
+    out = []
+    for v in eqn.params.values():
+        for u in (v if isinstance(v, (list, tuple)) else [v]):
+            if isinstance(u, jax.extend.core.ClosedJaxpr):
+                out.append(u.jaxpr)
+            elif isinstance(u, jax.extend.core.Jaxpr):
+                out.append(u)
+    return out
+
+
+def walk(jaxpr, row_elems: Optional[int] = None) -> Counts:
+    """Count reads/sorts/gathers/scatters over a jaxpr (recursive).
+
+    ``jaxpr`` may be a ``Jaxpr`` or ``ClosedJaxpr``.  ``row_elems`` selects
+    the operand size whose reads are counted; with None, ``reads`` stays 0
+    and only the op-class counters are filled.
+    """
+    if hasattr(jaxpr, "jaxpr"):             # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    c = Counts()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        rowsized = row_elems is not None and any(
+            getattr(v, "aval", None) is not None
+            and v.aval.size == row_elems for v in eqn.invars)
+        if name == "pallas_call":
+            c.reads += bool(rowsized)
+            continue
+        subs = sub_jaxprs(eqn)
+        if subs:
+            for s in subs:
+                c += walk(s, row_elems)
+            continue
+        if name in SORT_PRIMS:
+            c.sorts += 1
+        if name in GATHER_PRIMS:
+            c.gathers += 1
+        if name in SCATTER_PRIMS:
+            c.scatters += 1
+        if rowsized and name not in LAYOUT_PRIMS:
+            c.reads += 1
+    return c
+
+
+def trace_counts(fn, *args, row_elems: Optional[int] = None, **kwargs
+                 ) -> Counts:
+    """Trace ``fn(*args, **kwargs)`` and walk the resulting jaxpr."""
+    import jax
+    return walk(jax.make_jaxpr(fn)(*args, **kwargs), row_elems=row_elems)

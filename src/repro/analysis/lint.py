@@ -1,0 +1,237 @@
+"""FL-specific source lints (AST pass) for bug classes this repo has paid
+for.  Run as ``python -m repro.analysis lint src/`` (also in tier-1 via
+``tests/test_analysis.py``).
+
+Each rule carries the PR/bug that motivated it in its docstring.
+Suppress a finding with ``# noqa: <rule-id>`` (or a bare ``# noqa``) on
+the offending line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[\w\-, ]+))?", re.IGNORECASE)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation."""
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _suppressed(src_lines: Sequence[str], line: int, rule: str) -> bool:
+    if not 1 <= line <= len(src_lines):
+        return False
+    m = _NOQA_RE.search(src_lines[line - 1])
+    if m is None:
+        return False
+    codes = m.group("codes")
+    if codes is None:
+        return True
+    return rule in {c.strip() for c in codes.split(",")}
+
+
+# --------------------------------------------------------------------------
+# rule: traced-random-split
+# --------------------------------------------------------------------------
+
+def _jitted_names(tree: ast.Module) -> set:
+    """Names of functions the module jits: ``@jax.jit``-decorated,
+    ``@partial(jax.jit, ...)``-decorated, or passed to a ``jax.jit(...)``
+    call anywhere in the module."""
+    jitted = set()
+
+    def is_jit(node: ast.AST) -> bool:
+        return _dotted(node) in ("jax.jit", "jit")
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if is_jit(dec):
+                    jitted.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    if is_jit(dec.func):
+                        jitted.add(node.name)
+                    elif _dotted(dec.func) in ("functools.partial",
+                                               "partial") and dec.args \
+                            and is_jit(dec.args[0]):
+                        jitted.add(node.name)
+        elif isinstance(node, ast.Call) and is_jit(node.func):
+            for arg in node.args[:1]:
+                name = _dotted(arg)
+                if name:
+                    jitted.add(name.split(".")[-1])
+    return jitted
+
+
+def check_traced_random_split(tree: ast.Module, path: str,
+                              src_lines: Sequence[str]) -> List[Finding]:
+    """No traced ``jax.random.split`` inside jitted round-program code.
+
+    Motivated by PR 5: per-client PRNG keys MUST be split host-side —
+    ``jax.random.split`` traced under a 2-D (data, model) mesh produces
+    different threefry bits than the same split on one device, silently
+    breaking cross-mesh parity.  ``flat_round``/``fl_round`` split on host
+    and pass the key batch in as data; a split that sneaks back inside a
+    jitted program reintroduces the divergence with no test failing until
+    the mesh shape changes.
+    """
+    rule = "traced-random-split"
+    jitted = _jitted_names(tree)
+    out: List[Finding] = []
+
+    def scan(fn: ast.AST, owner: str) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and _dotted(node.func) in (
+                    "jax.random.split", "random.split", "jrandom.split"):
+                if not _suppressed(src_lines, node.lineno, rule):
+                    out.append(Finding(
+                        path, node.lineno, node.col_offset, rule,
+                        f"jax.random.split traced inside jitted "
+                        f"function {owner!r}; split keys host-side and "
+                        f"pass the batch in (PR 5 threefry-parity bug)"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name in jitted:
+            scan(node, node.name)
+    return out
+
+
+# --------------------------------------------------------------------------
+# rule: bare-assert
+# --------------------------------------------------------------------------
+
+def check_bare_assert(tree: ast.Module, path: str,
+                      src_lines: Sequence[str]) -> List[Finding]:
+    """No bare ``assert`` for input validation outside kernels.
+
+    Motivated by PR 3: ``checkpoint.restore`` validated restored
+    structures with ``assert``, which vanishes under ``python -O`` —
+    corrupt checkpoints loaded silently.  Validation must raise
+    ``ValueError``/``TypeError`` with the offending value in the message.
+    Kernel-internal shape asserts (``src/repro/kernels/``) are exempt:
+    they are developer invariants on traced shapes, not input validation.
+    """
+    rule = "bare-assert"
+    norm = path.replace("\\", "/")
+    if "/kernels/" in norm or norm.startswith("kernels/"):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert) \
+                and not _suppressed(src_lines, node.lineno, rule):
+            out.append(Finding(
+                path, node.lineno, node.col_offset, rule,
+                "bare assert is stripped under python -O; raise "
+                "ValueError with the offending value instead "
+                "(PR 3 checkpoint.restore bug)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# rule: import-time-jnp
+# --------------------------------------------------------------------------
+
+def check_import_time_jnp(tree: ast.Module, path: str,
+                          src_lines: Sequence[str]) -> List[Finding]:
+    """No ``jnp`` / jax-array calls at module import time.
+
+    Motivated by the mesh/launch design (PR 3/5): the first jax array op
+    initializes the backend and FREEZES the device topology, so a
+    module-level ``jnp.(...)`` call makes ``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N`` (and any future
+    ``jax.distributed.initialize``) silently ineffective for every later
+    import.  ``launch/mesh.py`` keeps meshes behind functions for exactly
+    this reason; constants belong inside functions or plain Python.
+    """
+    rule = "import-time-jnp"
+    out: List[Finding] = []
+
+    def scan(body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                scan(stmt.body)
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                    # deferred bodies don't run at import
+                    for inner in ast.walk(node):
+                        inner._repro_deferred = True  # type: ignore
+                    continue
+                if getattr(node, "_repro_deferred", False):
+                    continue
+                if isinstance(node, ast.Call):
+                    name = _dotted(node.func) or ""
+                    if name.startswith(("jnp.", "jax.numpy.")) \
+                            and not _suppressed(src_lines, node.lineno,
+                                                rule):
+                        out.append(Finding(
+                            path, node.lineno, node.col_offset, rule,
+                            f"{name} called at module import time; this "
+                            f"initializes the jax backend and freezes "
+                            f"the device topology before XLA_FLAGS / "
+                            f"distributed init can take effect"))
+
+    scan(tree.body)
+    return out
+
+
+RULES = (check_traced_random_split, check_bare_assert,
+         check_import_time_jnp)
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Finding]:
+    """Run every rule over one source string."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, "syntax-error",
+                        str(e.msg))]
+    lines = src.splitlines()
+    out: List[Finding] = []
+    for rule in RULES:
+        out.extend(rule(tree, path, lines))
+    return sorted(out, key=lambda f: (f.path, f.line, f.col))
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    files: List[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            files.extend(sorted(pp.rglob("*.py")))
+        else:
+            files.append(pp)
+    out: List[Finding] = []
+    for f in files:
+        out.extend(lint_source(f.read_text(), str(f)))
+    return out

@@ -1,0 +1,154 @@
+"""Runtime-adjacent analysis passes: donation verification, recompile
+auditing, and cache hygiene.
+
+These passes check the properties that only exist at run time — whether
+XLA actually materialized the requested ``input_output_aliases`` for the
+resident ping-pong buffers, and whether the compiled-program caches
+(``round._ROUND_CACHE``, ``ResidentDriver._cbufs``) behave: a cache key
+that under-discriminates (the PR 5/6 bug class: keys missing the mesh or
+the padded row count) shows up here as a key collision or a silent wrong-
+program hit; a key that over-discriminates shows up as an unexpected
+retrace.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis import hlo as hlo_mod
+
+
+def check_donation(txt: str, expected: Iterable[int]) -> List[str]:
+    """Violation messages for donations that did NOT materialize in a
+    compiled program's ``input_output_alias`` header.
+
+    ``expected`` are flattened parameter indices (the resident round
+    donates params 0 and 1: g_buf and the cohort scratch).  A donation
+    XLA drops (shape/sharding mismatch between the donated input and
+    every output) is silent — the program still runs, resident memory
+    just doubles — so no numeric test catches it; this pass does.
+    """
+    donated = hlo_mod.donated_params(txt)
+    return [f"donation of parameter {p} not materialized "
+            f"(aliased params: {sorted(donated) or 'none'})"
+            for p in sorted(set(expected)) if p not in donated]
+
+
+class _InstrumentedCache(OrderedDict):
+    """OrderedDict recording (event, key) for every hit / insert / evict."""
+
+    def __init__(self, src, events: List[Tuple[str, Tuple]]):
+        self._events = []       # swallow the pre-existing entries' inserts
+        super().__init__(src)
+        self._events = events
+
+    def get(self, key, default=None):
+        val = super().get(key, default)
+        if val is not default:
+            self._events.append(("hit", key))
+        return val
+
+    def __setitem__(self, key, value):
+        if key not in self:
+            self._events.append(("insert", key))
+        super().__setitem__(key, value)
+
+    def popitem(self, last=True):
+        key, value = super().popitem(last)
+        self._events.append(("evict", key))
+        return key, value
+
+
+class RecompileAuditor:
+    """Context manager instrumenting ``round._ROUND_CACHE``.
+
+    Records every program-cache hit, insert (a retrace + compile) and LRU
+    evict while active — the async admit/merge programs share the same
+    cache, so one auditor sees all round-program builds.  Use it to pin
+    cache behavior across mesh/pad/row-count variations::
+
+        with RecompileAuditor() as aud:
+            make_flat_round(cfg, fl, index, any_malicious=False, mesh=m1)
+            make_flat_round(cfg, fl, index, any_malicious=False, mesh=m1b)
+        assert aud.inserts == 1 and aud.hits == 1   # rebuilt-equal mesh hits
+
+    An insert where a hit was expected is an *unexpected retrace* (key
+    over-discriminates, e.g. keying a mesh by object identity); a hit
+    where an insert was expected means the key under-discriminates (the
+    PR 6 ``_cbufs`` bug class) — ``report()`` gives the counts, ``events``
+    the full (event, key) sequence for forensics.
+    """
+
+    def __init__(self):
+        self.events: List[Tuple[str, Tuple]] = []
+
+    def __enter__(self) -> "RecompileAuditor":
+        from repro.core import round as round_mod
+        self._round_mod = round_mod
+        self._orig = round_mod._ROUND_CACHE
+        round_mod._ROUND_CACHE = _InstrumentedCache(self._orig, self.events)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        # fold mutations back into a plain OrderedDict so nothing keeps
+        # recording after the audit window
+        self._round_mod._ROUND_CACHE = OrderedDict(
+            self._round_mod._ROUND_CACHE)
+        return None
+
+    def _count(self, kind: str) -> int:
+        return sum(1 for e, _ in self.events if e == kind)
+
+    @property
+    def hits(self) -> int:
+        return self._count("hit")
+
+    @property
+    def inserts(self) -> int:
+        return self._count("insert")
+
+    @property
+    def evictions(self) -> int:
+        return self._count("evict")
+
+    def report(self) -> Dict[str, int]:
+        return {"hits": self.hits, "inserts": self.inserts,
+                "evictions": self.evictions}
+
+
+def check_cache_keys(keyed: Iterable[Tuple[str, Tuple]]) -> List[str]:
+    """Collision messages over (label, cache key) pairs: two DIFFERENT
+    labels mapping to the same key means the key under-discriminates —
+    those variants would silently share one compiled program (the PR 5/6
+    bug class: a key missing the mesh, the pad width, or the row count).
+    Pass keys built with ``round._round_key`` / the async program keys.
+    """
+    seen: Dict[Tuple, str] = {}
+    out: List[str] = []
+    for label, key in keyed:
+        prev = seen.get(key)
+        if prev is not None and prev != label:
+            out.append(f"cache-key collision: {prev!r} and {label!r} "
+                       f"share one compiled-program cache entry")
+        seen.setdefault(key, label)
+    return out
+
+
+def audit_cbufs(driver) -> List[str]:
+    """Hygiene check over a ``ResidentDriver``-style scratch pool
+    (``._cbufs``: padded row count -> (rows, N) buffer): every key must
+    equal its buffer's actual row count, and no deleted (donated-away)
+    buffer may stay referenced.  Both were real bugs (PR 6): keying on the
+    raw cohort size held one never-donated buffer per real size and
+    retained dead donated buffers forever.
+    """
+    out: List[str] = []
+    for rows, buf in getattr(driver, "_cbufs", {}).items():
+        if buf.is_deleted():
+            out.append(f"_cbufs[{rows}] holds a deleted buffer "
+                       f"(donated elsewhere but never evicted)")
+            continue
+        if buf.shape[0] != rows:
+            out.append(f"_cbufs[{rows}] buffer has {buf.shape[0]} rows — "
+                       f"key does not match the padded shape")
+    return out

@@ -1,0 +1,295 @@
+"""The canonical program set for ``python -m repro.analysis check``.
+
+Lowers + compiles the programs whose structure the repo's invariants live
+on — the sync resident round (data-only and 2x2 (data, model) mesh), the
+standalone aggregation path, the async admit + merge programs, and the
+fused trimmed-quantile pass — and evaluates each against the contract its
+OWN module declares (``core.round.round_contract``,
+``core.async_round.admit_contract``/``merge_contract``,
+``kernels.fedfa_agg.ops.accumulate_contract``,
+``kernels.fedfa_quantile.ops.fused_quantile_contract``).
+
+Needs a multi-device backend for the collectives to exist; the CLI
+re-execs itself under ``--xla_force_host_platform_device_count=4`` when
+the host has fewer (the flag is read at jax init, so it cannot be set in
+an already-initialized process).
+
+The fixture is deliberately tiny (the reduced smollm-135m the test suite
+and benchmarks also use) — contracts are about program STRUCTURE, which
+is shape-independent beyond the mesh divisibility constraints.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+from repro.analysis.contracts import Report
+
+
+def _fixture(m: int, local_steps: int = 1, batch: int = 2,
+             seq_len: int = 8, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.core.server import FLConfig, make_client_specs
+    from repro.data import partition as part_mod
+    from repro.data import pipeline, synthetic
+    from repro.launch.train import client_arch_pool
+    from repro.models import model as model_mod
+
+    n_classes = 10
+    cfg = get_arch("smollm-135m").reduced().replace(
+        n_layers=4, n_sections=2, vocab_size=64, tie_embeddings=False)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    specs = make_client_specs(cfg, m, archs=client_arch_pool(cfg, "width"),
+                              seed=seed)
+    parts = part_mod.iid_partition(m, n_classes, seed=seed)
+    profiles = synthetic.make_class_profiles(n_classes, cfg.vocab_size,
+                                             seed=seed)
+    b = pipeline.round_batches_cls(
+        parts, list(range(m)), n_classes, cfg.vocab_size,
+        local_steps=local_steps, batch=batch, seq_len=seq_len,
+        profiles=profiles, seed=100)
+    batches = {k: jnp.asarray(v) for k, v in b.items()}
+    # the kernelized configuration (interpret mode off-TPU) — the
+    # structural contracts describe the kernel path
+    fl = FLConfig(local_steps=local_steps, lr=0.05, strategy="fedfa",
+                  task="cls", agg_engine="flat", use_kernel=True,
+                  interpret=True)
+    return cfg, fl, params, specs, batches
+
+
+def _padded_inputs(cfg, fl, params, specs, batches, mesh, rows=None):
+    """(index, m_real, rows, padded runtime tuple, padded batches)."""
+    from repro.core import flat
+    from repro.core.server import default_class_masks, stack_runtimes
+    from repro.sharding import cohort as csh
+
+    index = flat.get_index(params, pad_to=csh.model_shards(mesh))
+    runtimes = stack_runtimes(cfg, specs)
+    m = len(specs)
+    pad = (rows - m) if rows is not None else csh.pad_rows(m, mesh)
+    m_real = m if pad else None
+    (masks, gates, gmaps, nd, cms, mal), bpad = csh.pad_cohort(
+        runtimes, batches, pad)
+    mp = m + pad
+    cms_in = default_class_masks(cms, cfg, fl, mp)
+    return index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal), bpad
+
+
+def round_report(mesh, m: int = 3) -> Report:
+    """Lower + compile the resident round under ``mesh``; check its
+    declared contract (donated ping-pong, no full-cohort gather, data-only
+    mesh: zero all-gathers + >= 1 N-sized psum)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.core import round as round_mod
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(m)
+    index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal), bpad = \
+        _padded_inputs(cfg, fl, params, specs, batches, mesh)
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
+    c = jax.device_put(jnp.zeros((mp, index.n_padded), jnp.float32),
+                       csh.cohort_buffer_sharding(mesh))
+    fn = round_mod.make_flat_round(cfg, fl, index, any_malicious=False,
+                                   mesh=mesh, m_real=m_real)
+    keys = jax.random.split(jax.random.PRNGKey(0), mp)
+    txt = fn.lower(g, c, masks, gates, gmaps, nd, cms_in, mal, bpad,
+                   keys).compile().as_text()
+    return round_mod.round_contract(index, mesh, rows=mp).check(hlo=txt)
+
+
+def agg_report(mesh, m: int = 3) -> Report:
+    """Lower the aggregation path standalone on the round's own shardings
+    (g over ``model``, cohort rows over ``data`` pre-split) and check the
+    ``accumulate`` contract: zero all-gathers, reduce-scattered (M', γ)
+    sums capped at N/n_model per all-reduce with model shards."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.kernels.fedfa_agg import ops as agg_ops
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(m)
+    index, _, mp, (masks, gates, gmaps, nd, _, _), _ = _padded_inputs(
+        cfg, fl, params, specs, batches, mesh)
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(1), (mp, index.n_padded),
+                          jnp.float32), csh.cohort_sharding(mesh))
+    fn = jax.jit(lambda g, x, nd: flat.aggregate_buffers(
+        index, g, x, cfg, masks, gates, gmaps, nd, graft=True, scale=True,
+        use_kernel=True, interpret=True, mesh=mesh),
+        out_shardings=csh.global_sharding(mesh))
+    txt = fn.lower(g, x, nd).compile().as_text()
+    return agg_ops.accumulate_contract(index.n_padded, mesh).check(hlo=txt)
+
+
+def admit_report(mesh, capacity: int = 3) -> Report:
+    """Lower the async admit program for one pool shape and check its
+    contract (pool never gathered, pool buffer donation materialized)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import async_round
+    from repro.core import flat
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(capacity)
+    rows = capacity + csh.pad_rows(capacity, mesh)
+    index, _, _, (masks, gates, _, _, cms_in, mal), bpad = _padded_inputs(
+        cfg, fl, params, specs, batches, mesh, rows=rows)
+    g = jax.device_put(flat.flatten(index, params), csh.replicated(mesh))
+    c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
+                       csh.cohort_sharding(mesh))
+    keys = jax.random.split(jax.random.PRNGKey(0), rows)
+    slots = jnp.arange(rows, dtype=jnp.int32)
+    fn = async_round.make_admit_program(cfg, fl, index,
+                                        any_malicious=False, mesh=mesh,
+                                        rows=rows)
+    txt = fn.lower(g, c, masks, gates, cms_in, mal, bpad, keys,
+                   slots).compile().as_text()
+    return async_round.admit_contract(index, mesh, rows=rows).check(hlo=txt)
+
+
+def merge_report(mesh, capacity: int = 3) -> Report:
+    """Lower the async bounded-staleness merge and check its contract
+    (zero all-gathers over the whole-row pool, g_buf donation)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import async_round
+    from repro.core import flat
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(capacity)
+    rows = capacity + csh.pad_rows(capacity, mesh)
+    index, _, _, (masks, gates, gmaps, _, _, _), _ = _padded_inputs(
+        cfg, fl, params, specs, batches, mesh, rows=rows)
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
+    c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
+                       csh.cohort_sharding(mesh))
+    w = jnp.arange(rows, dtype=jnp.float32)
+    fn = async_round.make_merge_program(cfg, fl, index, mesh=mesh,
+                                        rows=rows)
+    txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
+    return async_round.merge_contract(index, mesh, rows=rows).check(hlo=txt)
+
+
+def quantile_reports(m: int = 4, r: int = 8, length: int = 512,
+                     trim: float = 0.95) -> List[Report]:
+    """Trace both trimmed-norm paths on one (m, r, length) row block and
+    check the jaxpr contracts: fused = 1 row read / 0 sorts, top_k tail =
+    the pinned 7 reads / 1 sort reference."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.kernels.fedfa_quantile import ops as q_ops
+
+    rows = jax.random.normal(jax.random.PRNGKey(0), (m, r, length),
+                             jnp.float32)
+    q = jnp.full((m,), 1.0 - (1.0 - trim) * 0.5, jnp.float32)
+
+    def topk(rows, q):
+        ra = jnp.abs(rows)
+        t = flat._row_quantile(ra, q, trim)
+        return jnp.sqrt(flat._rows_trimmed_sq(ra, t))
+
+    def fused(rows, q):
+        _, sq = flat._rows_trimmed_stats(rows, q, trim, True, True)
+        return jnp.sqrt(sq)
+
+    out = []
+    for contract, fn in ((q_ops.fused_quantile_contract(), fused),
+                         (q_ops.topk_tail_contract(), topk)):
+        jaxpr = jax.make_jaxpr(fn)(rows, q)
+        out.append(contract.check(jaxpr=jaxpr, row_elems=rows.size))
+    return out
+
+
+def canonical_reports(progress: Callable[[str], None] = lambda s: None
+                      ) -> List[Report]:
+    """Every contract of the canonical program set, in table order.
+    Requires >= 4 devices with both mesh axes available."""
+    import jax
+    from repro.launch.mesh import make_data_mesh, make_mesh_2d
+
+    if jax.device_count() < 4:
+        raise RuntimeError(
+            f"the canonical check set needs >= 4 devices (got "
+            f"{jax.device_count()}); run via `python -m repro.analysis "
+            f"check`, which forces 4 host devices")
+    mesh_1d = make_data_mesh()
+    mesh_2d = make_mesh_2d(2, 2)
+    reports: List[Report] = []
+    for label, build in (
+            ("round (data mesh)", lambda: round_report(mesh_1d)),
+            ("round (2x2 mesh)", lambda: round_report(mesh_2d)),
+            ("aggregation (data mesh)", lambda: agg_report(mesh_1d)),
+            ("aggregation (2x2 mesh)", lambda: agg_report(mesh_2d)),
+            ("async admit (data mesh)", lambda: admit_report(mesh_1d)),
+            ("async merge (data mesh)", lambda: merge_report(mesh_1d)),
+            ("quantile jaxpr", quantile_reports)):
+        progress(f"lowering {label} ...")
+        got = build()
+        reports.extend(got if isinstance(got, list) else [got])
+    return reports
+
+
+def cache_checks() -> List[Tuple[str, List[str]]]:
+    """The runtime-adjacent pass results for the check CLI: (pass name,
+    violation messages) pairs — empty messages means PASS."""
+    import jax
+    from repro.analysis import passes
+    from repro.core import flat
+    from repro.core import round as round_mod
+    from repro.launch.mesh import make_data_mesh, make_mesh_2d
+    from repro.models import model as model_mod
+    from repro.configs import get_arch
+    from repro.core.server import FLConfig
+
+    cfg = get_arch("smollm-135m").reduced().replace(
+        n_layers=4, n_sections=2, vocab_size=64, tie_embeddings=False)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    index = flat.get_index(params)
+    fl = FLConfig(local_steps=1, lr=0.05, strategy="fedfa", task="cls",
+                  agg_engine="flat")
+    mesh_1d, mesh_2d = make_data_mesh(), make_mesh_2d(2, 2)
+
+    # key discrimination: every mesh/pad/row-count variation must key a
+    # DISTINCT compiled program (the PR 5/6 bug class)
+    variants = [
+        ("no mesh", round_mod._round_key(cfg, fl, index,
+                                         any_malicious=False)),
+        ("data mesh", round_mod._round_key(cfg, fl, index,
+                                           any_malicious=False,
+                                           mesh=mesh_1d)),
+        ("2x2 mesh", round_mod._round_key(cfg, fl, index,
+                                          any_malicious=False,
+                                          mesh=mesh_2d)),
+        ("data mesh, padded m=3", round_mod._round_key(
+            cfg, fl, index, any_malicious=False, mesh=mesh_1d, m_real=3)),
+        ("malicious", round_mod._round_key(cfg, fl, index,
+                                           any_malicious=True)),
+    ]
+    collisions = passes.check_cache_keys(variants)
+
+    # retrace audit: a REBUILT identical mesh must hit the program cache,
+    # not recompile (mesh keyed by value, not identity)
+    with passes.RecompileAuditor() as aud:
+        round_mod.make_flat_round(cfg, fl, index, any_malicious=False,
+                                  mesh=make_data_mesh())
+        round_mod.make_flat_round(cfg, fl, index, any_malicious=False,
+                                  mesh=make_data_mesh())
+    retrace = []
+    if aud.inserts > 1:
+        retrace.append(
+            f"rebuilt-identical mesh recompiled the round program "
+            f"({aud.report()}) — mesh keyed by identity, not value?")
+    if aud.hits < 1:
+        retrace.append(f"no cache hit on the second identical build "
+                       f"({aud.report()})")
+    return [("cache-key discrimination", collisions),
+            ("recompile audit (rebuilt mesh)", retrace)]

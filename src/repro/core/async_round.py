@@ -122,6 +122,44 @@ def staleness_weight(s, acfg: AsyncConfig) -> np.ndarray:
     return np.where(s <= acfg.staleness_max, base, 0.0).astype(np.float32)
 
 
+def admit_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
+    """Declared contract of the admit program.
+
+    The donated pool buffer (flattened param 1; param 0 is the NON-donated
+    g_buf) must alias — admissions ping-pong one allocation.  The slot
+    scatter (``c_buf.at[slots].set``) carries RUNTIME slot indices, so
+    GSPMD cannot prove it shard-local and re-layouts the pool across the
+    data axis once: the compiled program contains up to one full-pool
+    all-gather (at most 2 all-gathers total).  The contract pins that
+    known cost so growth shows up; removing it (static per-dispatch slot
+    shapes, or an all-to-all permutation) is a ROADMAP follow-up.  The
+    zero-all-gather invariant proper lives on the AGGREGATION paths
+    (``merge_contract`` and the round/agg contracts)."""
+    from repro.analysis.contracts import Contract
+    return Contract(
+        name="async/admit",
+        description="admit: train dispatch group, scatter into pool slots",
+        all_gathers=(0, 2), full_cohort_gathers=(0, 1),
+        cohort_elems=rows * index.n_padded, donated=frozenset({1}))
+
+
+def merge_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
+    """Declared contract of the merge program: the bounded-staleness merge
+    aggregates the whole-row P("data") pool with ZERO all-gathers (the
+    invariant the slot-pool layout decision preserves — same aggregation
+    tail as the resident round) and >= 1 N-sized (M', γ) psum on a
+    multi-device mesh; the donated g_buf (param 0) must alias."""
+    from repro.analysis.contracts import Contract
+    multi = mesh is not None and mesh.size > 1
+    kw = {}
+    if multi and cohort_sh.model_shards(mesh) == 1:
+        kw = dict(scale_allreduces=(1, None), scale_elems=index.n_padded)
+    return Contract(
+        name="async/merge",
+        description="merge: staleness-weighted aggregation over the pool",
+        all_gathers=0, donated=frozenset({0}), **kw)
+
+
 def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                        *, any_malicious: bool, mesh=None, rows: int):
     """Build (or fetch) the jitted admit program for one pool shape:

@@ -113,6 +113,46 @@ def _mesh_key(mesh) -> Optional[Tuple]:
             tuple(d.id for d in mesh.devices.flat))
 
 
+def _round_key(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex, *,
+               any_malicious: bool, donate: bool = True, mesh=None,
+               m_real: Optional[int] = None) -> Tuple:
+    """The ``_ROUND_CACHE`` key of one resident round program — everything
+    the trace closes over.  Exposed so ``repro.analysis.passes
+    .check_cache_keys`` can probe that mesh/pad/row-count variations map
+    to DISTINCT keys (the PR 5/6 bug class was keys missing one of these
+    dimensions)."""
+    return (index, cfg, _fl_static(fl), bool(any_malicious), bool(donate),
+            _mesh_key(mesh), m_real)
+
+
+def round_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
+    """The resident round program's declared contract (see
+    ``repro.analysis.contracts``), for a cohort padded to ``rows``.
+
+    Always: the full (rows, N) cohort is never all-gathered, and both
+    resident buffers (params 0 = g_buf, 1 = cohort scratch) must have
+    materialized donation aliases (the ping-pong).  On a multi-device
+    data-only mesh the round has NO legitimate all-gather at all and the
+    (M', γ) partial sums show up as >= 1 N-sized all-reduce.  With model
+    shards the strict communication bounds live on the aggregation path
+    contract (``kernels.fedfa_agg.ops.accumulate_contract``) — GSPMD may
+    re-layout *training* intermediates over the idle model axis, so the
+    full-round gather/reduce counts are deliberately looser here.
+    """
+    from repro.analysis.contracts import Contract
+    multi = mesh is not None and mesh.size > 1
+    ms = cohort_sh.model_shards(mesh)
+    kw: Dict[str, Any] = {}
+    if multi and ms == 1:
+        kw = dict(all_gathers=0, scale_allreduces=(1, None),
+                  scale_elems=index.n_padded)
+    return Contract(
+        name=f"round/ms{ms}",
+        description="resident round: donated ping-pong, no cohort gather",
+        full_cohort_gathers=0, cohort_elems=rows * index.n_padded,
+        donated=frozenset({0, 1}), **kw)
+
+
 def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                     *, any_malicious: bool, donate: bool = True,
                     mesh=None, m_real: Optional[int] = None):
@@ -139,8 +179,8 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
     the reported loss averages over those only (pad rows are already inert
     in aggregation via ``n_data = 0``).
     """
-    key = (index, cfg, _fl_static(fl), bool(any_malicious), bool(donate),
-           _mesh_key(mesh), m_real)
+    key = _round_key(cfg, fl, index, any_malicious=any_malicious,
+                     donate=donate, mesh=mesh, m_real=m_real)
     fn = _ROUND_CACHE.get(key)
     if fn is not None:
         _ROUND_CACHE.move_to_end(key)

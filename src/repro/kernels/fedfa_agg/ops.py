@@ -53,6 +53,38 @@ def _accum_local(x: jax.Array, weights: jax.Array, mask: jax.Array,
     return out[:n]
 
 
+def accumulate_contract(n_padded: int, mesh=None):
+    """Declared contract of the aggregation path built on ``accumulate``
+    (``flat.aggregate_buffers`` lowered standalone on the round's own
+    shardings — see ``repro.analysis.contracts``).
+
+    Zero all-gathers, always: the (M', γ) reduction is a per-shard partial
+    sum, never a replicated (m, n) re-gather.  On a multi-device data-only
+    mesh the partial sums combine as 1-2 psums of exactly ``n_padded``
+    elements and no all-reduce exceeds that.  With model shards the sums
+    **reduce-scatter** over ``model`` (>= 1) and every N-scale all-reduce
+    carries exactly ``n_padded / n_model`` elements — the per-device
+    communication volume the 2-D sharding exists to bound.
+    """
+    from repro.analysis.contracts import Contract
+    from repro.sharding.cohort import model_shards
+    multi = mesh is not None and mesh.size > 1
+    ms = model_shards(mesh)
+    if not multi:
+        return Contract(name="agg/1dev",
+                        description="aggregation path, single device",
+                        all_gathers=0)
+    scale = n_padded // ms
+    kw = dict(allreduce_max_elems=scale, scale_allreduces=(1, 2),
+              scale_elems=scale)
+    if ms > 1:
+        kw["reduce_scatters"] = (1, None)
+    return Contract(
+        name=f"agg/ms{ms}",
+        description="aggregation path: partial sums, no cohort re-gather",
+        all_gathers=0, **kw)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("use_kernel", "interpret", "mesh"))
 def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,

@@ -6,7 +6,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -29,36 +28,13 @@ from repro.sharding.specs import (batch_axes, batch_specs, cache_specs,
 # TPU v5e hardware constants (single chip)
 HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
-
-_COLL_RE = re.compile(
-    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))\S*\s+"
-    r"(all-reduce|all-gather|all-to-all|reduce-scatter|collective-permute)")
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum result bytes of every collective op in the partitioned HLO."""
-    out: Dict[str, int] = {}
-    for type_str, op in _COLL_RE.findall(hlo_text):
-        out[op] = out.get(op, 0) + _shape_bytes(type_str)
-    out["total"] = sum(v for k, v in out.items() if k != "total")
-    return out
+    """Sum result bytes of every collective op in the partitioned HLO —
+    via the one shared parser in ``repro.analysis.hlo`` (async pairs count
+    once)."""
+    from repro.analysis import hlo as hlo_mod
+    return hlo_mod.byte_totals(hlo_text)
 
 
 def _shard(mesh, spec_tree, abstract_tree=None):

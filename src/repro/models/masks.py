@@ -38,7 +38,8 @@ class WidthSpec:
 
 def width_spec(cfg: ArchConfig, w: float) -> WidthSpec:
     """Contiguous-prefix active sizes for width multiplier w in (0, 1]."""
-    assert 0.0 < w <= 1.0
+    if not 0.0 < w <= 1.0:
+        raise ValueError(f"width multiplier must be in (0, 1], got {w!r}")
     if cfg.n_kv_heads > 0:
         kv = max(1, int(round(w * cfg.n_kv_heads)))
         group = cfg.n_heads // cfg.n_kv_heads
@@ -117,10 +118,16 @@ def max_section_depths(cfg: ArchConfig) -> Tuple[int, ...]:
 def depth_gates(cfg: ArchConfig, section_depths: Tuple[int, ...]) -> jnp.ndarray:
     """(R,) float gate over stage-0 repeats: first d_s repeats of section s."""
     bounds = cfg.section_bounds()
-    assert len(section_depths) == len(bounds)
+    if len(section_depths) != len(bounds):
+        raise ValueError(
+            f"expected {len(bounds)} section depths (one per section), "
+            f"got {len(section_depths)}: {section_depths!r}")
     g = np.zeros(cfg.stages()[0][1], np.float32)
     for (lo, hi), d in zip(bounds, section_depths):
-        assert 1 <= d <= hi - lo, f"depth {d} invalid for section {(lo, hi)}"
+        if not 1 <= d <= hi - lo:
+            raise ValueError(
+                f"depth {d} invalid for section {(lo, hi)}: must be in "
+                f"[1, {hi - lo}]")
         g[lo:lo + d] = 1.0
     return jnp.asarray(g)
 

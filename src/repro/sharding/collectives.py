@@ -1,55 +1,13 @@
-"""HLO collective-op inspection for the sharding gates.
+"""Back-compat shim: the HLO collective walk moved to ``repro.analysis.hlo``.
 
-The sharded round's invariants (zero all-gathers in the aggregation path,
-reduce-scattered (M', γ) sums, per-device all-reduce volume ~N/n_model) are
-asserted by walking compiled HLO text in ``benchmarks/bench_shard.py`` and
-``tests/_force_multidevice_child.py``.  This module is the ONE copy of that
-walk, so the parsing rules — count the ``-start(`` half of async pairs
-(which carries the shape), never the ``-done(`` half; take the first shape
-on the line — stay in lockstep everywhere the invariant is gated.
+The structured analyzer (typed ``CollectiveOp`` records, tuple-shaped
+async ``-start`` results, layout annotations, donation aliases) is the ONE
+copy of the HLO parsing rules; import ``repro.analysis.hlo`` directly in
+new code.  This module re-exports the legacy surface so existing callers
+keep working.
 """
 from __future__ import annotations
 
-import re
-from typing import List, Optional, Tuple
-
-KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-         "collective-permute")
-
-_SHAPE_RE = re.compile(r"=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
-
-
-def result_elems(line: str) -> Optional[int]:
-    """Element count of the first shape on an HLO line (None if shapeless)."""
-    sm = _SHAPE_RE.search(line)
-    if sm is None:
-        return None
-    e = 1
-    for d in (int(d) for d in sm.group(2).split(",") if d):
-        e *= d
-    return e
-
-
-def collective_lines(txt: str) -> List[Tuple[str, Optional[int]]]:
-    """All collective ops of a compiled-HLO text as (kind, result elems).
-
-    Sync ops lower as `` all-reduce(...)``; TPU/GPU backends often emit
-    async pairs — the ``-start(`` half (which carries the shape) is counted,
-    never the ``-done(`` half, so each op appears exactly once.
-    """
-    out = []
-    for line in txt.splitlines():
-        for kind in KINDS:
-            if f" {kind}(" in line or f" {kind}-start(" in line:
-                out.append((kind, result_elems(line)))
-    return out
-
-
-def count(txt: str, kind: str) -> int:
-    return sum(1 for k, _ in collective_lines(txt) if k == kind)
-
-
-def sizes(txt: str, kind: str, min_elems: int = 0) -> List[int]:
-    """Result sizes of every ``kind`` op with >= min_elems elements."""
-    return [e for k, e in collective_lines(txt)
-            if k == kind and e is not None and e >= min_elems]
+from repro.analysis.hlo import (KINDS, CollectiveOp,  # noqa: F401
+                                collective_lines, collectives, count,
+                                max_elems, result_elems, sizes)

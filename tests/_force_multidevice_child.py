@@ -64,14 +64,6 @@ def _fl(strategy):
                     agg_engine="flat")
 
 
-def _count_collectives(txt, n_scale):
-    """(all_gathers, reduce_scatters, n_scale all-reduce sizes) of an HLO
-    text — via the one shared walk in ``repro.sharding.collectives``."""
-    from repro.sharding import collectives as coll
-    return (coll.count(txt, "all-gather"), coll.count(txt, "reduce-scatter"),
-            coll.sizes(txt, "all-reduce", min_elems=n_scale))
-
-
 if "--quantile-collectives" in sys.argv:
     import jax.numpy as jnp
 
@@ -90,13 +82,10 @@ if "--quantile-collectives" in sys.argv:
         use_kernel=True, interpret=True, mesh=MESH))
     txt = fn.lower(g, x, nd).compile().as_text()
 
-    from repro.sharding import collectives as coll
-    n_gather = coll.count(txt, "all-gather")
-    assert n_gather == 0, \
-        f"{n_gather} all-gather(s) in the kernelized aggregation"
-    n_psum = sum(1 for e in coll.sizes(txt, "all-reduce") if e == index.n)
-    assert 1 <= n_psum <= 2, \
-        f"expected 1-2 N-sized all-reduces (the (M', γ) psums), got {n_psum}"
+    from repro.kernels.fedfa_agg.ops import accumulate_contract
+    rep = accumulate_contract(index.n_padded, MESH).check(hlo=txt)
+    assert rep.ok, rep.violations
+    n_psum = rep.measured["scale_allreduces"]
     print(f"collectives: all-gather=0 n-sized-all-reduce={n_psum}")
     print("QUANTILE COLLECTIVES OK")
     sys.exit(0)
@@ -120,15 +109,13 @@ if "--agg-collectives-2d" in sys.argv:
         use_kernel=True, interpret=True, mesh=mesh),
         out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
-    half = index.n_padded // 2
-    n_ag, n_rs, big_ars = _count_collectives(txt, half)
-    assert n_ag == 0, f"{n_ag} all-gather(s) in the 2x2 aggregation path"
-    assert n_rs >= 1, "no reduce-scatter in the 2x2 aggregation path"
-    assert all(e == half for e in big_ars), \
-        f"all-reduce volume above N/n_model: {big_ars} (N/2 = {half})"
-    assert len(big_ars) <= 2, big_ars
+    from repro.kernels.fedfa_agg.ops import accumulate_contract
+    rep = accumulate_contract(index.n_padded, mesh).check(hlo=txt)
+    assert rep.ok, rep.violations
+    n_rs = rep.measured["reduce_scatters"]
+    n_half_ars = rep.measured["scale_allreduces"]
     print(f"collectives 2d: all-gather=0 reduce-scatter={n_rs} "
-          f"n/2-all-reduce={len(big_ars)}")
+          f"n/2-all-reduce={n_half_ars}")
     print("AGG COLLECTIVES 2D OK")
     sys.exit(0)
 
@@ -257,8 +244,7 @@ if "--async" in sys.argv:
     # --- merge program collective structure: the bounded-staleness merge
     # aggregates the whole-row P("data") pool with ZERO all-gathers (the
     # invariant the slot-pool layout decision preserves)
-    from repro.core.async_round import make_merge_program
-    from repro.sharding import collectives as coll
+    from repro.core.async_round import make_merge_program, merge_contract
     index = flat.get_index(PARAMS)
     rows = 4
     masks, gates, gmaps, _, _, _ = stack_runtimes(CFG, SPECS + SPECS[:1])
@@ -270,9 +256,8 @@ if "--async" in sys.argv:
                     agg_engine="flat", use_kernel=True, interpret=True)
     fn = make_merge_program(CFG, fl_k, index, mesh=MESH, rows=rows)
     txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
-    n_gather = coll.count(txt, "all-gather")
-    assert n_gather == 0, \
-        f"{n_gather} all-gather(s) in the async merge aggregation"
+    rep = merge_contract(index, MESH, rows=rows).check(hlo=txt)
+    assert rep.ok, rep.violations
     print("async merge collectives: all-gather=0 OK")
 
     # --- _cbufs regression: under the mesh, m=3 and m=4 cohorts both pad

@@ -1,0 +1,24 @@
+"""Deliberately-planted lint violations for ``tests/test_analysis.py``.
+
+NOT collected by pytest (no ``test_`` prefix) and never imported — the
+lint tests read it by path.  One violation per rule: a module-level jnp
+call (import-time-jnp), a ``jax.random.split`` inside a jitted function
+(traced-random-split), and input validation via ``assert`` (bare-assert).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_BAD_CONSTANT = jnp.zeros((4,))  # initializes the backend at import
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def bad_round_step(key, n):
+    keys = jax.random.split(key, n)  # traced split: threefry-parity bug
+    return keys
+
+
+def bad_validate(w):
+    assert 0.0 < w <= 1.0, "width out of range"
+    return w

@@ -1,0 +1,343 @@
+"""Tests for the ``repro.analysis`` program-contract subsystem: the HLO
+collective parser, the jaxpr visitor (fused-quantile read/sort pins), the
+Contract/Report machinery, the runtime passes (donation, cache keys,
+``_cbufs`` hygiene), the FL source lints (planted fixture must flag,
+``src/`` must be clean), and the ``masks.py`` ValueError regressions."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Contract, contracts, hlo, jaxpr as jaxpr_mod
+from repro.analysis import lint, passes
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURE = Path(__file__).resolve().parent / "fixtures" / \
+    "lint_bad_traced_split.py"
+
+
+# ---------------------------------------------------------------------------
+# hlo: structured collective parsing
+# ---------------------------------------------------------------------------
+
+# Representative lines: CPU sync form, TPU async -start/-done pairs, a
+# tuple-shaped async all-reduce (payload + u32[] sync flag), a
+# layout-annotated tuple all-gather (operand, result), and an op name
+# inside metadata that must NOT count.
+HLO_SAMPLE = """\
+HloModule jit_round, input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, must-alias) }
+
+  %ar0 = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups={{0,1,2,3}}
+  %ag0 = (f32[256]{0:T(256)}, f32[1024]{0:T(256)}) all-gather-start(f32[256]{0} %y), replica_groups=[2,2]<=[4]
+  %ag0d = f32[1024]{0} all-gather-done((f32[256]{0}, f32[1024]{0}) %ag0)
+  %ar1 = (f32[512]{0}, u32[]) all-reduce-start(f32[512]{0} %z)
+  %ar1d = f32[512]{0} all-reduce-done((f32[512]{0}, u32[]) %ar1)
+  %rs0 = f32[128]{0} reduce-scatter(f32[512]{0} %w), replica_groups={{0,1,2,3}}
+  %f = f32[8]{0} fusion(f32[8]{0} %a), metadata={op_name="all-gather-fusion"}
+"""
+
+
+def test_hlo_collectives_counts_and_async_pairs():
+    ops = hlo.collectives(HLO_SAMPLE, strict=True)
+    assert hlo.count(ops, "all-reduce") == 2
+    assert hlo.count(ops, "all-gather") == 1
+    assert hlo.count(ops, "reduce-scatter") == 1
+    assert hlo.count(ops, "all-to-all") == 0
+    # the metadata op_name and the -done halves never count
+    assert len(ops) == 4
+
+
+def test_hlo_tuple_payload_is_float_max_not_first_shape():
+    ops = hlo.collectives(HLO_SAMPLE)
+    ag = next(op for op in ops if op.kind == "all-gather")
+    assert ag.is_async and ag.elems == 1024      # result, not the operand
+    ar1 = next(op for op in ops if op.kind == "all-reduce" and op.is_async)
+    assert ar1.elems == 512                      # payload, not the u32[] flag
+
+
+def test_hlo_sizes_max_and_replica_groups():
+    assert hlo.sizes(HLO_SAMPLE, "all-reduce") == [1024, 512]
+    assert hlo.sizes(HLO_SAMPLE, "all-reduce", min_elems=600) == [1024]
+    assert hlo.max_elems(HLO_SAMPLE, "all-gather") == 1024
+    assert hlo.summarize(HLO_SAMPLE) == {
+        "all-reduce": 2, "all-gather": 1, "reduce-scatter": 1}
+    groups = [op.replica_groups for op in hlo.collectives(HLO_SAMPLE)]
+    assert "{{0,1,2,3}}" in groups and "[2,2]<=[4]" in groups
+
+
+def test_hlo_strict_raises_on_unbalanced_pairs():
+    trunc = HLO_SAMPLE.replace(
+        "%ar1d = f32[512]{0} all-reduce-done((f32[512]{0}, u32[]) %ar1)", "")
+    hlo.collectives(trunc)                       # lenient: fine
+    with pytest.raises(ValueError, match="unbalanced"):
+        hlo.collectives(trunc, strict=True)
+
+
+def test_hlo_result_elems_on_tuple_and_layout_lines():
+    assert hlo.result_elems(
+        "%a = (f32[512]{0}, u32[]) all-reduce-start(f32[512]{0} %z)") == 512
+    assert hlo.result_elems("%a = f32[16,8]{1,0:T(256)} add(...)") == 128
+    assert hlo.result_elems("ROOT %t = () tuple()") is None
+
+
+def test_hlo_donated_params_parses_module_header():
+    donated = hlo.donated_params(HLO_SAMPLE)
+    assert donated == {0: "may-alias", 1: "must-alias"}
+    assert hlo.donated_params("HloModule plain\n") == {}
+
+
+def test_hlo_byte_totals():
+    totals = hlo.byte_totals(
+        "%ar = f32[100]{0} all-reduce(f32[100]{0} %x)\n"
+        "%cp = bf16[10]{0} collective-permute(bf16[10]{0} %y)\n")
+    assert totals == {"all-reduce": 400, "collective-permute": 20,
+                      "total": 420}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr visitor: the fused-quantile structural pin
+# ---------------------------------------------------------------------------
+
+def _quantile_fns():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+
+    rows = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 512),
+                             jnp.float32)
+    q = jnp.full((4,), 1.0 - 0.05 * 0.5, jnp.float32)
+
+    def topk(rows, q):
+        ra = jnp.abs(rows)
+        t = flat._row_quantile(ra, q, 0.95)
+        return jnp.sqrt(flat._rows_trimmed_sq(ra, t))
+
+    def fused(rows, q):
+        _, sq = flat._rows_trimmed_stats(rows, q, 0.95, True, True)
+        return jnp.sqrt(sq)
+
+    return rows, q, topk, fused
+
+
+def test_jaxpr_walk_pins_fused_and_topk_counts():
+    rows, q, topk, fused = _quantile_fns()
+    c_fused = jaxpr_mod.trace_counts(fused, rows, q, row_elems=rows.size)
+    c_topk = jaxpr_mod.trace_counts(topk, rows, q, row_elems=rows.size)
+    assert (c_fused.reads, c_fused.sorts) == (1, 0)
+    assert (c_topk.reads, c_topk.sorts) == (7, 1)
+
+
+def test_quantile_contracts_hold_on_traced_jaxprs():
+    import jax
+    from repro.kernels.fedfa_quantile.ops import (fused_quantile_contract,
+                                                  topk_tail_contract)
+    rows, q, topk, fused = _quantile_fns()
+    rep_f = fused_quantile_contract().check(
+        jaxpr=jax.make_jaxpr(fused)(rows, q), row_elems=rows.size)
+    rep_t = topk_tail_contract().check(
+        jaxpr=jax.make_jaxpr(topk)(rows, q), row_elems=rows.size)
+    assert rep_f.ok, rep_f.violations
+    assert rep_t.ok, rep_t.violations
+
+
+# ---------------------------------------------------------------------------
+# contracts: bounds, validation, evaluation
+# ---------------------------------------------------------------------------
+
+def test_check_bound_forms():
+    assert contracts.check_bound("x", 3, 3) is None
+    assert "expected exactly 2" in contracts.check_bound("x", 3, 2)
+    assert contracts.check_bound("x", 3, (1, None)) is None
+    assert "expected >= 4" in contracts.check_bound("x", 3, (4, None))
+    assert "expected <= 2" in contracts.check_bound("x", 3, (None, 2))
+    assert contracts.check_bound("x", 3, None) is None
+
+
+def test_contract_requires_payload_sizes():
+    with pytest.raises(ValueError, match="cohort_elems"):
+        Contract(name="bad", full_cohort_gathers=0)
+    with pytest.raises(ValueError, match="scale_elems"):
+        Contract(name="bad", scale_allreduces=1)
+
+
+def test_contract_check_against_hlo_text():
+    c = Contract(name="t", all_gathers=1, reduce_scatters=(1, None),
+                 allreduce_max_elems=2048, scale_allreduces=(1, 2),
+                 scale_elems=512, full_cohort_gathers=0, cohort_elems=4096,
+                 donated=frozenset({0, 1}))
+    rep = c.check(hlo=HLO_SAMPLE)
+    assert rep.ok, rep.violations
+    assert rep.measured["scale_allreduces"] == 1
+    assert rep.measured["donated"] == [0, 1]
+
+    tight = Contract(name="t2", all_gathers=0, allreduce_max_elems=600,
+                     donated=frozenset({2}))
+    rep2 = tight.check(hlo=HLO_SAMPLE)
+    assert not rep2.ok
+    joined = " ".join(rep2.violations)
+    assert "all_gathers" in joined and "exceed" in joined \
+        and "donation" in joined
+
+
+def test_contract_missing_inputs_is_a_violation():
+    rep = Contract(name="t", all_gathers=0).check()
+    assert not rep.ok and "no compiled HLO" in rep.violations[0]
+    rep = Contract(name="t", row_reads=1).check()
+    assert not rep.ok and "no jaxpr" in rep.violations[0]
+
+
+def test_format_table_marks_failures():
+    good = Contract(name="g", all_gathers=1).check(hlo=HLO_SAMPLE)
+    bad = Contract(name="b", all_gathers=0).check(hlo=HLO_SAMPLE)
+    table = contracts.format_table([good, bad])
+    assert "PASS" in table and "FAIL b:" in table
+
+
+# ---------------------------------------------------------------------------
+# passes: donation, cache keys, auditor, _cbufs
+# ---------------------------------------------------------------------------
+
+def test_check_donation_reports_missing_alias():
+    assert passes.check_donation(HLO_SAMPLE, [0, 1]) == []
+    msgs = passes.check_donation(HLO_SAMPLE, [0, 3])
+    assert len(msgs) == 1 and "parameter 3" in msgs[0]
+
+
+def test_check_cache_keys_flags_collisions():
+    assert passes.check_cache_keys([("a", (1,)), ("b", (2,))]) == []
+    msgs = passes.check_cache_keys(
+        [("mesh=None", (1, "x")), ("mesh=2x2", (1, "x")),
+         ("mesh=None", (1, "x"))])          # same-label repeat is fine
+    assert len(msgs) == 1 and "collision" in msgs[0]
+
+
+def test_recompile_auditor_records_and_restores():
+    from collections import OrderedDict
+    from repro.core import round as round_mod
+
+    with passes.RecompileAuditor() as aud:
+        round_mod._ROUND_CACHE["_analysis_probe"] = "p"
+        assert round_mod._ROUND_CACHE.get("_analysis_probe") == "p"
+        round_mod._ROUND_CACHE.get("_analysis_missing")
+    try:
+        assert aud.inserts == 1 and aud.hits == 1
+        assert aud.report() == {"hits": 1, "inserts": 1, "evictions": 0}
+        # plain OrderedDict restored: no recording after exit
+        assert type(round_mod._ROUND_CACHE) is OrderedDict
+        round_mod._ROUND_CACHE.get("_analysis_probe")
+        assert aud.hits == 1
+    finally:
+        round_mod._ROUND_CACHE.pop("_analysis_probe", None)
+
+
+def test_audit_cbufs_flags_bad_keys_and_dead_buffers():
+    class FakeBuf:
+        def __init__(self, rows, deleted=False):
+            self.shape = (rows, 16)
+            self._deleted = deleted
+
+        def is_deleted(self):
+            return self._deleted
+
+    class FakeDriver:
+        pass
+
+    d = FakeDriver()
+    d._cbufs = {4: FakeBuf(4)}
+    assert passes.audit_cbufs(d) == []
+    d._cbufs = {3: FakeBuf(4), 4: FakeBuf(4, deleted=True)}
+    msgs = passes.audit_cbufs(d)
+    assert len(msgs) == 2
+    assert any("key does not match" in m for m in msgs)
+    assert any("deleted buffer" in m for m in msgs)
+
+
+def test_round_key_variants_do_not_collide():
+    """The PR 5/6 bug class, as a key property: every variant that must
+    compile a distinct program gets a distinct ``_round_key``."""
+    from repro.core.round import _round_key
+    from repro.core.server import FLConfig
+    from repro.launch.mesh import make_data_mesh
+    from conftest import tiny
+
+    cfg = tiny("smollm-135m")
+    fl = FLConfig(local_steps=1, lr=0.05, strategy="fedfa", task="cls",
+                  agg_engine="flat")
+    mesh = make_data_mesh()
+    keyed = [
+        ("no mesh", _round_key(cfg, fl, None, any_malicious=False)),
+        ("data mesh", _round_key(cfg, fl, None, any_malicious=False,
+                                 mesh=mesh)),
+        ("padded m=3", _round_key(cfg, fl, None, any_malicious=False,
+                                  mesh=mesh, m_real=3)),
+        ("malicious", _round_key(cfg, fl, None, any_malicious=True,
+                                 mesh=mesh)),
+        ("no donate", _round_key(cfg, fl, None, any_malicious=False,
+                                 mesh=mesh, donate=False)),
+    ]
+    assert passes.check_cache_keys(keyed) == []
+    # a rebuilt-identical mesh maps to the SAME key (no spurious retrace)
+    mesh2 = make_data_mesh()
+    assert _round_key(cfg, fl, None, any_malicious=False, mesh=mesh) \
+        == _round_key(cfg, fl, None, any_malicious=False, mesh=mesh2)
+
+
+# ---------------------------------------------------------------------------
+# lint: planted fixture flags, src/ is clean
+# ---------------------------------------------------------------------------
+
+def test_lint_flags_planted_fixture():
+    findings = lint.lint_paths([str(FIXTURE)])
+    rules = {f.rule for f in findings}
+    assert rules == {"traced-random-split", "bare-assert", "import-time-jnp"}
+    split = next(f for f in findings if f.rule == "traced-random-split")
+    assert "bad_round_step" in split.message
+    assert str(FIXTURE) in str(split) and f":{split.line}:" in str(split)
+
+
+def test_lint_src_tree_is_clean():
+    """The tier-1 shim for ``python -m repro.analysis lint src/``."""
+    findings = lint.lint_paths([str(REPO / "src")])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_lint_noqa_suppression_and_syntax_error():
+    src = "import jax.numpy as jnp\nx = jnp.zeros((2,))  # noqa: import-time-jnp\n"
+    assert lint.lint_source(src, "a.py") == []
+    src2 = "import jax.numpy as jnp\nx = jnp.zeros((2,))  # noqa: bare-assert\n"
+    assert [f.rule for f in lint.lint_source(src2, "a.py")] \
+        == ["import-time-jnp"]
+    bad = lint.lint_source("def f(:\n", "b.py")
+    assert [f.rule for f in bad] == ["syntax-error"]
+
+
+def test_lint_kernels_exempt_from_bare_assert():
+    src = "def f(x):\n    assert x.ndim == 2\n    return x\n"
+    assert lint.lint_source(src, "src/repro/kernels/foo/kernel.py") == []
+    assert [f.rule for f in lint.lint_source(src, "src/repro/core/foo.py")] \
+        == ["bare-assert"]
+
+
+# ---------------------------------------------------------------------------
+# masks.py: ValueError regressions (formerly bare asserts)
+# ---------------------------------------------------------------------------
+
+def test_width_spec_rejects_bad_multiplier_with_value():
+    from repro.models.masks import width_spec
+    from conftest import tiny
+    cfg = tiny("smollm-135m")
+    for w in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match=repr(w)):
+            width_spec(cfg, w)
+
+
+def test_depth_gates_reject_bad_section_depths_with_value():
+    from repro.models.masks import depth_gates, max_section_depths
+    from conftest import tiny
+    cfg = tiny("smollm-135m").replace(n_layers=4, n_sections=2)
+    full = max_section_depths(cfg)
+    with pytest.raises(ValueError, match="section depths"):
+        depth_gates(cfg, full + (1,))
+    with pytest.raises(ValueError, match="depth 0 invalid"):
+        depth_gates(cfg, (0,) + full[1:])
+    with pytest.raises(ValueError, match=f"depth {full[0] + 1} invalid"):
+        depth_gates(cfg, (full[0] + 1,) + full[1:])
