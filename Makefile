@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check lint analysis bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async
+.PHONY: tier1 check lint analysis analysis-json bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
@@ -14,6 +14,9 @@ lint:             ## FL-specific AST source lints over src/
 
 analysis:         ## program-contract check: lower the canonical program set, print the contract table
 	$(PY) -m repro.analysis check
+
+analysis-json:    ## program-contract check + machine-readable report -> results/ANALYSIS.json
+	$(PY) -m repro.analysis check --json results/ANALYSIS.json
 
 bench-round:      ## resident vs per-round driver, m in {4,16,64} -> BENCH_round.json
 	$(PY) benchmarks/bench_round.py

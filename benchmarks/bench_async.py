@@ -17,9 +17,11 @@ metric the gate rides on:
 under ``--min-ratio`` (CI smoke).  Host wall-clock for both drivers is
 recorded as well but NOT gated (CPU wall time is noisy and both drivers
 run the same jitted training/aggregation programs).  The run also gates
-the two structural invariants: parity mode bit-equal to ``run_rounds``,
-and ZERO all-gathers in the lowered merge program's aggregation (when >= 2
-devices are present — CI forces 4).  Emits ``BENCH_async.json`` (or
+the structural invariants: parity mode bit-equal to ``run_rounds``, and
+the declared admit + merge contracts on the freshly lowered programs —
+ZERO all-gathers in both (the admit is a slot-order select since PR 8),
+materialized donation, and the per-device peak-live-bytes budgets (when
+>= 2 devices are present — CI forces 4).  Emits ``BENCH_async.json`` (or
 ``results/BENCH_async_smoke.json`` with ``--smoke``).
 
   PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--min-ratio X]
@@ -99,35 +101,55 @@ def _check_parity(cfg, fl, params, data_fn, m, rounds=2):
                                jax.tree.leaves(p_async)))
 
 
-def _merge_all_gathers(cfg, fl, params, specs, rows):
-    """All-gather count in the lowered merge program's aggregation (needs a
-    multi-device backend for the collectives to exist; returns None on one
-    device)."""
+def _async_contract_reports(cfg, fl, params, specs, data_fn, rows):
+    """Lower BOTH async programs (admit + bounded-staleness merge) on the
+    bench's own shapes and evaluate their declared contracts — zero
+    all-gathers (the admit is a slot-order select, the merge a partial-sum
+    aggregation), materialized donation, per-device peak-bytes budgets.
+    Needs a multi-device backend for the collectives to exist; returns
+    None on one device."""
     import jax
     import jax.numpy as jnp
     if jax.device_count() < 2:
         return None
-    from repro.core import flat
-    from repro.core.async_round import make_merge_program
-    from repro.core.server import stack_runtimes
+    from repro.core import async_round, flat
+    from repro.core.server import default_class_masks, stack_runtimes
     from repro.launch.mesh import make_data_mesh
-    from repro.analysis import hlo
     from repro.sharding import cohort as csh
 
     mesh = make_data_mesh()
     index = flat.get_index(params, pad_to=csh.model_shards(mesh))
     row_specs = (specs * rows)[:rows]
-    masks, gates, gmaps, _, _, _ = stack_runtimes(cfg, row_specs)
+    _, batches = data_fn(0)
+    bpad = jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a] + [a[:1]] * (rows - a.shape[0]))[:rows], batches)
+    masks, gates, gmaps, _, cms, mal = stack_runtimes(cfg, row_specs)
+    cms_in = default_class_masks(cms, cfg, fl, rows)
     g = jax.device_put(flat.flatten(index, params),
                        csh.global_sharding(mesh))
     c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
                        csh.cohort_sharding(mesh))
-    w = jnp.arange(rows, dtype=jnp.float32)
     fl_k = fl.__class__(**{**fl.__dict__, "use_kernel": True,
                            "interpret": True})
-    fn = make_merge_program(cfg, fl_k, index, mesh=mesh, rows=rows)
-    txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
-    return hlo.count(txt, "all-gather")
+    keys = jax.random.split(jax.random.PRNGKey(0), rows)
+    written = jnp.ones((rows,), dtype=jnp.int32)
+    g_rep = jax.device_put(flat.flatten(index, params),
+                           csh.replicated(mesh))
+    fn_a = async_round.make_admit_program(cfg, fl_k, index,
+                                          any_malicious=False, mesh=mesh,
+                                          rows=rows)
+    txt_a = fn_a.lower(g_rep, c, masks, gates, cms_in, mal, bpad, keys,
+                       written).compile().as_text()
+    admit = async_round.admit_contract(index, mesh, rows=rows) \
+        .check(hlo=txt_a)
+    w = jnp.arange(rows, dtype=jnp.float32)
+    fn_m = async_round.make_merge_program(cfg, fl_k, index, mesh=mesh,
+                                          rows=rows)
+    txt_m = fn_m.lower(g, c, masks, gates, gmaps, w).compile().as_text()
+    merge = async_round.merge_contract(index, mesh, rows=rows) \
+        .check(hlo=txt_m)
+    return admit, merge
 
 
 def _run_async_traced(cfg, fl, params, data_fn, lat, m, merges,
@@ -238,8 +260,11 @@ def main() -> None:
         async_sim, async_rows, async_wall = _run_async_traced(
             cfg, fl, params, data_fn, lat, m, args.merges,
             merge_k, args.staleness_max)
-        gathers = _merge_all_gathers(cfg, fl, params, specs,
-                                     rows=m + (-m) % jax.device_count())
+        reports = _async_contract_reports(
+            cfg, fl, params, specs, data_fn,
+            rows=m + (-m) % jax.device_count())
+        gathers = None if reports is None else \
+            reports[1].measured.get("all_gathers")
         sync_rps = args.merges / sync_sim
         async_rps = args.merges / async_sim
         rec = {
@@ -255,6 +280,13 @@ def main() -> None:
             "wall_s_not_gated": {"sync": round(sync_wall, 3),
                                  "async": round(async_wall, 3)},
             "merge_all_gathers": gathers,
+            "contracts": None if reports is None else {
+                r.contract.name: {
+                    "ok": r.ok,
+                    "peak_live_bytes_per_device":
+                        r.measured.get("peak_live_bytes_per_device"),
+                    "violations": r.violations}
+                for r in reports},
         }
         results["runs"][f"m{m}"] = rec
         print(f"m={m:3d}  sim sync {sync_rps:8.4f} r/s  "
@@ -265,6 +297,16 @@ def main() -> None:
             print(f"FAIL: {gathers} all-gather(s) in the merge aggregation "
                   f"at m={m}", flush=True)
             ok = False
+        if reports is not None:
+            for r in reports:
+                if not r.ok:
+                    # declared admit/merge contracts: 0 all-gathers,
+                    # donation, peak-bytes budget — violations carry the
+                    # blamed source line that introduced each collective
+                    for v in r.violations:
+                        print(f"FAIL contract {r.contract.name} at m={m}: "
+                              f"{v}", flush=True)
+                    ok = False
         if args.min_ratio is not None \
                 and rec["sim"]["ratio"] < args.min_ratio:
             print(f"FAIL: async/sync ratio {rec['sim']['ratio']:.2f}x "

@@ -120,7 +120,9 @@ def _collectives(cfg, fl, params, specs, batches, mesh):
     max_gather = max(gathers, default=0)
     psums = sum(1 for op in ops
                 if op.kind == "all-reduce" and op.elems == index.n_padded)
-    return dict(counts), full_gathers, psums, max_gather
+    from repro.core.round import round_contract
+    report = round_contract(index, mesh, rows=mp).check(hlo=txt)
+    return dict(counts), full_gathers, psums, max_gather, report
 
 
 def _agg_collectives(cfg, fl, params, specs, batches, mesh):
@@ -222,7 +224,7 @@ def main() -> None:
         for ms, mesh in meshes.items():
             dt_sh = _time_resident(cfg, fl, params, specs, batches,
                                    args.rounds, mesh=mesh)
-            counts, full_gathers, psums, max_gather = _collectives(
+            counts, full_gathers, psums, max_gather, report = _collectives(
                 cfg, fl, params, specs, batches, mesh)
             n_ag, n_rs, big_ars = _agg_collectives(
                 cfg, fl, params, specs, batches, mesh)
@@ -247,6 +249,12 @@ def main() -> None:
                     "c_buf": (mp // d_sh) * (index.n_padded // ms) * 4,
                 },
                 "n_padded": index.n_padded,
+                "contract": {"name": report.contract.name,
+                             "ok": report.ok,
+                             "peak_live_bytes_per_device":
+                                 report.measured.get(
+                                     "peak_live_bytes_per_device"),
+                             "violations": report.violations},
             }
             rec[f"ms{ms}"] = sub
             print(f"m={m:3d} ms={ms}  unsharded "
@@ -254,6 +262,13 @@ def main() -> None:
                   f"{sub['rounds_per_s']:7.2f} r/s  ratio {ratio:.2f}x  "
                   f"agg[ag={n_ag} rs={n_rs} ar={big_ars}]  "
                   f"collectives {counts}", flush=True)
+            if not report.ok:
+                # the declared round contract (collective caps, donation,
+                # per-device peak-bytes budget) with blamed source lines
+                for v in report.violations:
+                    print(f"FAIL contract {report.contract.name} at m={m} "
+                          f"ms={ms}: {v}", flush=True)
+                ok = False
             if full_gathers:
                 print(f"FAIL: {full_gathers} all-gather(s) materialize the "
                       f"full (m, N) cohort at m={m} ms={ms}", flush=True)

@@ -161,9 +161,13 @@ def check() -> None:
           "--smoke", "--min-ratio", "1.3"], shard_env),
         # program-contract check: every declared Contract (round, agg,
         # async admit/merge, quantile) evaluated on freshly lowered
-        # programs, plus the cache-key / recompile-audit passes
+        # programs, plus the cache-key / recompile-audit passes.  --json
+        # emits the machine-readable report validated below — trusting
+        # exit status alone would miss a check that silently skipped a
+        # program or dropped the peak-bytes fields.
         ("program-contract check (4 forced CPU devices)",
-         [sys.executable, "-m", "repro.analysis", "check", "--quiet"],
+         [sys.executable, "-m", "repro.analysis", "check", "--quiet",
+          "--json", os.path.join(root, "results", "ANALYSIS.json")],
          shard_env),
         ("FL source lints",
          [sys.executable, "-m", "repro.analysis", "lint",
@@ -175,7 +179,55 @@ def check() -> None:
         if rc != 0:
             print(f"CHECK FAILED at {name} (exit {rc})", flush=True)
             sys.exit(rc)
+    problems = _validate_analysis_json(
+        os.path.join(root, "results", "ANALYSIS.json"))
+    if problems:
+        for p in problems:
+            print(f"ANALYSIS.json invalid: {p}", flush=True)
+        print("CHECK FAILED at ANALYSIS.json validation", flush=True)
+        sys.exit(1)
     print("CHECK OK", flush=True)
+
+
+def _validate_analysis_json(path: str) -> list:
+    """Sanity-gate the machine-readable contract report: the six canonical
+    programs are present, every one declares AND measures
+    peak_live_bytes_per_device, nothing failed, and the sharded programs
+    carry collective provenance (blame) rows."""
+    problems = []
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [f"unreadable: {e}"]
+    if not data.get("ok"):
+        problems.append("top-level ok flag is false")
+    progs = {p.get("program"): p for p in data.get("programs", [])}
+    expected = ("round/ms1", "round/ms2", "agg/ms1", "agg/ms2",
+                "async/admit", "async/merge", "quantile/fused",
+                "quantile/topk")
+    for name in expected:
+        p = progs.get(name)
+        if p is None:
+            problems.append(f"program {name} missing")
+            continue
+        if not p.get("ok") or p.get("violations"):
+            problems.append(f"program {name} has violations: "
+                            f"{p.get('violations')}")
+        if "peak_live_bytes_per_device" not in p.get("spec", ""):
+            problems.append(f"program {name} does not declare "
+                            "peak_live_bytes_per_device")
+        peak = p.get("measured", {}).get("peak_live_bytes_per_device")
+        if not isinstance(peak, int) or peak <= 0:
+            problems.append(f"program {name} measured no positive peak "
+                            f"(got {peak!r})")
+    if progs.get("round/ms2") and not progs["round/ms2"].get("blame"):
+        problems.append("round/ms2 carries no collective blame rows "
+                        "(metadata provenance lost?)")
+    for pa in data.get("passes", []):
+        if not pa.get("ok"):
+            problems.append(f"pass {pa.get('name')} failed")
+    return problems
 
 
 def main() -> None:

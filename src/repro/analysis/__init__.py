@@ -3,8 +3,12 @@
 Three layers (see ``README.md`` in this directory):
 
   * ``hlo`` / ``jaxpr`` — the ONE copy of the HLO-text and jaxpr parsing
-    rules (typed ``CollectiveOp`` records, donation-alias parsing, the
-    read/sort jaxpr visitor);
+    rules (typed ``CollectiveOp`` records with source provenance,
+    donation-alias parsing, the read/sort jaxpr visitor);
+  * ``memory`` / ``blame`` — live-interval analysis over the scheduled
+    instruction sequence (statically estimated per-device peak bytes,
+    donation collapsing) and collective-to-source attribution via HLO
+    ``metadata`` (which Python line introduced each collective);
   * ``contracts`` — declarative ``Contract`` objects that programs
     declare next to their builders and every gate site evaluates;
   * ``passes`` / ``lint`` — runtime-adjacent checks (donation, recompile
@@ -14,6 +18,7 @@ CLI: ``python -m repro.analysis check`` (lower the canonical program set
 under forced multi-device meshes and print the full contract table) and
 ``python -m repro.analysis lint src/``.
 """
-from repro.analysis import hlo, jaxpr, lint, passes  # noqa: F401
+from repro.analysis import (blame, hlo, jaxpr, lint,  # noqa: F401
+                            memory, passes)
 from repro.analysis.contracts import (Bound, Contract, Report,  # noqa: F401
                                       format_table)

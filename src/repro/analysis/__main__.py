@@ -6,7 +6,10 @@ check   Lower + compile the canonical program set (sync round on data-only
         cache/donation passes.  Forces 4 host devices via a subprocess
         re-exec when the host has fewer (XLA reads
         ``--xla_force_host_platform_device_count`` at jax init, so it
-        cannot be set in-process).  Exit 1 on any FAIL.
+        cannot be set in-process).  Exit 1 on any FAIL.  ``--json PATH``
+        additionally writes the machine-readable report (measured values,
+        violations, peak estimates, blame tables) to PATH — the flag
+        rides through the re-exec, so the forced-device child writes it.
 
 lint    Run the FL-specific AST lints (``repro.analysis.lint``) over the
         given paths (default ``src/``).  Exit 1 on any finding.
@@ -50,8 +53,11 @@ def _cmd_check(args) -> int:
     ok = all(r.ok for r in reports)
 
     print()
+    passes = []
     for name, violations in programs.cache_checks():
         status = "PASS" if not violations else "FAIL"
+        passes.append({"name": name, "ok": not violations,
+                       "violations": list(violations)})
         print(f"{status}  {name}")
         for v in violations:
             print(f"      {v}")
@@ -60,6 +66,19 @@ def _cmd_check(args) -> int:
     n_fail = sum(1 for r in reports if not r.ok)
     print(f"contracts: {len(reports) - n_fail}/{len(reports)} passed"
           + ("" if ok else "  [FAIL]"))
+    if args.json:
+        import json
+        payload = {
+            "ok": ok,
+            "programs": [r.to_json() for r in reports],
+            "passes": passes,
+        }
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
     return 0 if ok else 1
 
 
@@ -81,6 +100,10 @@ def main(argv=None) -> int:
                                       "and report every contract")
     ck.add_argument("--quiet", action="store_true",
                     help="suppress per-program progress lines")
+    ck.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full machine-readable report "
+                         "(per-program measured values, violations, peak "
+                         "estimates, blame tables) to PATH")
     ck.set_defaults(fn=_cmd_check)
     ln = sub.add_parser("lint", help="run the FL-specific source lints")
     ln.add_argument("paths", nargs="*", default=["src/"],

@@ -1,0 +1,95 @@
+"""Attribute collectives to the Python source line that introduced them.
+
+XLA threads JAX's source provenance through lowering as per-instruction
+``metadata={op_name=... source_file=... source_line=...}``; ``analysis/hlo``
+parses it onto each :class:`~repro.analysis.hlo.CollectiveOp`.  This module
+turns those records into human-facing attributions so a contract violation
+names the line of *our* code that made GSPMD emit the collective — the
+difference between "admit has 2 unexplained all-gathers" (PR 7) and
+"``c_buf.at[slots].set`` at async_round.py:191 re-gathers the pool" (this
+PR's follow-up (a) fix).
+
+Ops XLA synthesizes itself (resharding halves, fusion roots) carry no
+metadata and render as ``(no provenance)`` — absence of blame is itself a
+signal that GSPMD, not user code, chose the op.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import hlo
+
+
+def short_op(op_name: Optional[str]) -> Optional[str]:
+    """Last component of a jax op_name path (``jit(f)/jit(main)/a/b`` →
+    ``b``) — the primitive that lowered to this op."""
+    if not op_name:
+        return None
+    return op_name.rstrip("/").rsplit("/", 1)[-1]
+
+
+def source_ref(op: hlo.CollectiveOp) -> Optional[str]:
+    """``file.py:line`` (basename) for an op, None without provenance."""
+    if not op.source_file:
+        return None
+    ref = os.path.basename(op.source_file)
+    if op.source_line is not None:
+        ref += f":{op.source_line}"
+    return ref
+
+
+def describe(op: hlo.CollectiveOp) -> str:
+    """One-line attribution: ``all-gather[9708544] scatter
+    (async_round.py:191)`` or ``... (no provenance)``."""
+    size = f"[{op.elems}]" if op.elems is not None else ""
+    prim = short_op(op.op_name)
+    ref = source_ref(op)
+    where = f"{prim} ({ref})" if prim and ref else (
+        prim or ref or "(no provenance)")
+    return f"{op.kind}{size} {where}"
+
+
+@dataclass(frozen=True)
+class BlameEntry:
+    """Collectives grouped by (kind, source line): one row of the table."""
+    kind: str
+    source: Optional[str]   # "file.py:line" or None (no provenance)
+    op_name: Optional[str]  # short primitive name of a representative op
+    count: int
+    max_elems: int
+    total_elems: int
+
+
+def blame_table(src: hlo.Source) -> List[BlameEntry]:
+    """Collectives of a program grouped by provenance, largest first."""
+    groups: Dict[Tuple[str, Optional[str]], List[hlo.CollectiveOp]] = {}
+    for op in hlo._ops(src):
+        groups.setdefault((op.kind, source_ref(op)), []).append(op)
+    out = [
+        BlameEntry(
+            kind=kind, source=ref, op_name=short_op(ops[0].op_name),
+            count=len(ops),
+            max_elems=max((o.elems or 0) for o in ops),
+            total_elems=sum((o.elems or 0) for o in ops))
+        for (kind, ref), ops in groups.items()
+    ]
+    out.sort(key=lambda e: (-e.total_elems, e.kind, e.source or ""))
+    return out
+
+
+def format_blame(src: hlo.Source, kinds: Optional[Sequence[str]] = None,
+                 limit: int = 8) -> List[str]:
+    """Attribution lines for a violation message, optionally filtered to the
+    offending collective kinds, biggest contributors first."""
+    rows = [e for e in blame_table(src)
+            if kinds is None or e.kind in kinds]
+    lines = [
+        f"{e.kind} x{e.count} (max {e.max_elems} elems) <- "
+        f"{(e.op_name or '?')} at {e.source or '(no provenance)'}"
+        for e in rows[:limit]
+    ]
+    if len(rows) > limit:
+        lines.append(f"... and {len(rows) - limit} more blame rows")
+    return lines

@@ -84,6 +84,13 @@ class Contract:
       max_all_gather_elems
                        Largest tolerated all-gather payload (e.g. the <= N
                        global-model broadcast into local training).
+      peak_live_bytes_per_device
+                       Bound on the statically-estimated per-device peak
+                       live bytes (``analysis/memory`` live-interval sweep
+                       over the scheduled module; the partitioned text is
+                       already per-device).  Proves donation ping-pong
+                       does not double-buffer and the cohort scratch stays
+                       ~(m, N)/(D*M) bytes per device.
 
     Donation (measured on the ``input_output_alias`` header):
       donated          Parameter indices that must have materialized
@@ -105,6 +112,7 @@ class Contract:
     full_cohort_gathers: Bound = None
     cohort_elems: Optional[int] = None
     max_all_gather_elems: Optional[int] = None
+    peak_live_bytes_per_device: Bound = None
     donated: Optional[frozenset] = None
     row_reads: Bound = None
     sorts: Bound = None
@@ -127,7 +135,8 @@ class Contract:
                                  "all_to_alls", "collective_permutes",
                                  "allreduce_max_elems", "scale_allreduces",
                                  "full_cohort_gathers",
-                                 "max_all_gather_elems", "donated"))
+                                 "max_all_gather_elems",
+                                 "peak_live_bytes_per_device", "donated"))
 
     _SPEC_SKIP = ("name", "description", "cohort_elems", "scale_elems")
 
@@ -161,8 +170,22 @@ class Contract:
                 violations.append(
                     f"donation aliases missing for parameter(s) "
                     f"{sorted(missing)} (materialized: {sorted(donated)})")
+        blame_rows = None
+        if hlo is not None:
+            from repro.analysis import blame as blame_mod
+            blame_rows = blame_mod.blame_table(hlo)
         return Report(contract=self, measured=measured,
-                      violations=violations)
+                      violations=violations, blame=blame_rows)
+
+    @staticmethod
+    def _with_blame(msg: str, ops, kinds) -> str:
+        """Append source attributions for the offending collective kinds —
+        every collective-structure failure names the Python line to fix."""
+        from repro.analysis import blame as blame_mod
+        lines = blame_mod.format_blame(ops, kinds=list(kinds), limit=4)
+        if lines:
+            msg += "".join("\n      blame: " + ln for ln in lines)
+        return msg
 
     def _check_hlo(self, txt: str, measured, violations) -> None:
         ops = hlo_mod.collectives(txt)
@@ -175,30 +198,31 @@ class Contract:
             measured[field] = n
             v = check_bound(field, n, getattr(self, field))
             if v:
-                violations.append(v)
+                violations.append(self._with_blame(v, ops, (kind,)))
         ar_sizes = hlo_mod.sizes(ops, "all-reduce")
         measured["all_reduces"] = len(ar_sizes)
         if self.allreduce_max_elems is not None:
             big = [e for e in ar_sizes if e > self.allreduce_max_elems]
             measured["allreduce_max_elems"] = max(ar_sizes, default=0)
             if big:
-                violations.append(
+                violations.append(self._with_blame(
                     f"all-reduce payload(s) {big} exceed "
-                    f"{self.allreduce_max_elems} elems")
+                    f"{self.allreduce_max_elems} elems",
+                    ops, ("all-reduce",)))
         if self.scale_allreduces is not None:
             n_scale = sum(1 for e in ar_sizes if e == self.scale_elems)
             measured["scale_allreduces"] = n_scale
             v = check_bound("scale_allreduces", n_scale,
                             self.scale_allreduces)
             if v:
-                violations.append(v)
+                violations.append(self._with_blame(v, ops, ("all-reduce",)))
         ag_max = hlo_mod.max_elems(ops, "all-gather")
         measured["max_all_gather_elems"] = ag_max
         if self.max_all_gather_elems is not None \
                 and ag_max > self.max_all_gather_elems:
-            violations.append(
+            violations.append(self._with_blame(
                 f"all-gather of {ag_max} elems exceeds "
-                f"{self.max_all_gather_elems}")
+                f"{self.max_all_gather_elems}", ops, ("all-gather",)))
         if self.full_cohort_gathers is not None:
             n_full = len(hlo_mod.sizes(ops, "all-gather",
                                        min_elems=self.cohort_elems))
@@ -206,7 +230,18 @@ class Contract:
             v = check_bound("full_cohort_gathers", n_full,
                             self.full_cohort_gathers)
             if v:
-                violations.append(v)
+                violations.append(self._with_blame(v, ops, ("all-gather",)))
+        if self.peak_live_bytes_per_device is not None:
+            from repro.analysis import memory as memory_mod
+            est = memory_mod.analyze(txt)
+            measured["peak_live_bytes_per_device"] = est.peak_bytes
+            v = check_bound("peak_live_bytes_per_device", est.peak_bytes,
+                            self.peak_live_bytes_per_device)
+            if v:
+                top = ", ".join(f"{name}={b}B" for name, b in est.top[:3])
+                violations.append(
+                    f"{v} (peak at schedule idx {est.peak_index}; "
+                    f"largest live buffers: {top})")
 
     def _check_jaxpr(self, jaxpr, row_elems, measured, violations) -> None:
         from repro.analysis import jaxpr as jaxpr_mod
@@ -242,14 +277,31 @@ class Contract:
 
 @dataclass
 class Report:
-    """One contract evaluation: measured values + violations."""
+    """One contract evaluation: measured values + violations + (when HLO
+    text was provided) the per-provenance collective blame table."""
     contract: Contract
     measured: Dict[str, object]
     violations: List[str]
+    blame: Optional[List] = None  # List[blame.BlameEntry]
 
     @property
     def ok(self) -> bool:
         return not self.violations
+
+    def to_json(self) -> Dict[str, object]:
+        """JSON-serializable dict (for ``check --json`` / ANALYSIS.json):
+        the declared spec, every measured value, violations and the
+        per-provenance blame table."""
+        from dataclasses import asdict
+        return {
+            "program": self.contract.name,
+            "description": self.contract.description,
+            "spec": self.contract.spec(),
+            "measured": dict(self.measured),
+            "violations": list(self.violations),
+            "ok": self.ok,
+            "blame": [asdict(b) for b in self.blame or []],
+        }
 
 
 def format_table(reports: Sequence[Report]) -> str:

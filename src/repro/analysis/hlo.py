@@ -1,8 +1,9 @@
 """Structured HLO analysis: collective ops + donation aliases of a compiled
 program.
 
-This is the ONE copy of the HLO text-parsing rules (it absorbs the former
-``repro.sharding.collectives``): every gate that inspects a lowered round —
+This is the ONE copy of the HLO text-parsing rules (it absorbed — and PR 8
+finally deleted — the former ``repro.sharding.collectives`` shim): every gate
+that inspects a lowered round —
 ``benchmarks/bench_shard.py``, ``bench_quantile.py``, ``bench_async.py``,
 ``tests/_force_multidevice_child.py`` and the ``repro.analysis`` contract
 checker — goes through the typed records here, so the parsing conventions
@@ -29,6 +30,11 @@ Parsing rules (see also ``repro/analysis/README.md``):
     and an optional leading tuple are handled.
   * ``replica_groups={{0,1},{2,3}}`` / iota ``[2,2]<=[4]`` forms are kept
     verbatim on the record for replica-group-sensitive checks.
+  * ``metadata={op_name="..." source_file="..." source_line=N}`` is parsed
+    onto the record so ``analysis/blame.py`` can attribute each collective
+    to the Python line that introduced it.  Every field is optional — XLA
+    drops metadata on ops it synthesizes itself (e.g. the resharding half
+    of an all-to-all pair), and those stay ``None``.
 
 Donation: the compiled module header carries
 ``input_output_alias={ {out}: (param, {index}, kind) }`` — ``donated_params``
@@ -61,6 +67,9 @@ _INSTR_RE = re.compile(
 
 _REPLICA_RE = re.compile(r"replica_groups=(\{\{[\d,{}\s]*\}\}|\[[\d,]*\]<=\[\d+\])")
 
+_METADATA_RE = re.compile(r"metadata=\{([^{}]*)\}")
+_MD_FIELD_RE = re.compile(r'(\w+)=(?:"((?:[^"\\]|\\.)*)"|(\d+))')
+
 # content nests braces one level deep ({out-index} and {param-index} tuples)
 _ALIAS_HDR_RE = re.compile(
     r"input_output_alias=\{((?:[^{}]|\{[^{}]*\})*)\}")
@@ -78,6 +87,9 @@ class CollectiveOp:
     is_async        lowered as a ``-start``/``-done`` pair
     replica_groups  the verbatim ``replica_groups=`` value (None if absent)
     line_no         1-based line in the HLO text (for error messages)
+    op_name         HLO ``metadata={op_name=...}`` (None if absent)
+    source_file     HLO ``metadata={source_file=...}`` (None if absent)
+    source_line     HLO ``metadata={source_line=...}`` (None if absent)
     """
     kind: str
     elems: Optional[int]
@@ -85,6 +97,9 @@ class CollectiveOp:
     is_async: bool
     replica_groups: Optional[str]
     line_no: int
+    op_name: Optional[str] = None
+    source_file: Optional[str] = None
+    source_line: Optional[int] = None
 
 
 def _elems(dims: Tuple[int, ...]) -> int:
@@ -126,6 +141,19 @@ def result_elems(line: str) -> Optional[int]:
     return payload_elems(parse_shapes(frag))
 
 
+def parse_metadata(line: str) -> Dict[str, Union[str, int]]:
+    """The ``metadata={...}`` fields of one HLO instruction line as a dict
+    (``source_line`` and other bare-integer fields become ints).  Empty when
+    the line carries no metadata — XLA omits it on ops it synthesizes."""
+    m = _METADATA_RE.search(line)
+    if m is None:
+        return {}
+    out: Dict[str, Union[str, int]] = {}
+    for key, sval, ival in _MD_FIELD_RE.findall(m.group(1)):
+        out[key] = int(ival) if ival else sval
+    return out
+
+
 def collectives(txt: str, strict: bool = False) -> List[CollectiveOp]:
     """All collective ops of a compiled-HLO text, in program order.
 
@@ -155,10 +183,15 @@ def collectives(txt: str, strict: bool = False) -> List[CollectiveOp]:
             starts[kind] = starts.get(kind, 0) + 1
         shapes = parse_shapes(m.group("result"))
         rg = _REPLICA_RE.search(line)
+        md = parse_metadata(line)
+        sl = md.get("source_line")
         out.append(CollectiveOp(kind=kind, elems=payload_elems(shapes),
                                 shapes=shapes, is_async=is_async,
                                 replica_groups=rg.group(1) if rg else None,
-                                line_no=ln))
+                                line_no=ln,
+                                op_name=md.get("op_name"),
+                                source_file=md.get("source_file"),
+                                source_line=sl if isinstance(sl, int) else None))
     if strict and starts != dones:
         raise ValueError(
             f"unbalanced async collective pairs: starts={starts} "

@@ -59,33 +59,56 @@ def _suppressed(src_lines: Sequence[str], line: int, rule: str) -> bool:
 # rule: traced-random-split
 # --------------------------------------------------------------------------
 
-def _jitted_names(tree: ast.Module) -> set:
-    """Names of functions the module jits: ``@jax.jit``-decorated,
+def _jitted_nodes(tree: ast.Module) -> set:
+    """The FunctionDef NODES the module jits: ``@jax.jit``-decorated,
     ``@partial(jax.jit, ...)``-decorated, or passed to a ``jax.jit(...)``
-    call anywhere in the module."""
+    call.  Call-form references resolve lexically (a ``jax.jit(_fn)``
+    inside a builder marks the sibling ``_fn`` closure, NOT an unrelated
+    method that happens to share the name — e.g. ``AsyncEngine._merge``
+    vs the jitted ``_merge`` closure in ``make_merge_program``)."""
     jitted = set()
 
     def is_jit(node: ast.AST) -> bool:
         return _dotted(node) in ("jax.jit", "jit")
 
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            for dec in node.decorator_list:
-                if is_jit(dec):
-                    jitted.add(node.name)
-                elif isinstance(dec, ast.Call):
-                    if is_jit(dec.func):
-                        jitted.add(node.name)
-                    elif _dotted(dec.func) in ("functools.partial",
-                                               "partial") and dec.args \
-                            and is_jit(dec.args[0]):
-                        jitted.add(node.name)
-        elif isinstance(node, ast.Call) and is_jit(node.func):
-            for arg in node.args[:1]:
-                name = _dotted(arg)
-                if name:
-                    jitted.add(name.split(".")[-1])
+    def handle_decorators(fn) -> None:
+        for dec in fn.decorator_list:
+            if is_jit(dec):
+                jitted.add(fn)
+            elif isinstance(dec, ast.Call):
+                if is_jit(dec.func):
+                    jitted.add(fn)
+                elif _dotted(dec.func) in ("functools.partial", "partial") \
+                        and dec.args and is_jit(dec.args[0]):
+                    jitted.add(fn)
+
+    def visit(body: Iterable[ast.stmt], env: dict) -> None:
+        local = dict(env)
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                local[stmt.name] = stmt
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                handle_decorators(stmt)
+                visit(stmt.body, local)
+            elif isinstance(stmt, ast.ClassDef):
+                visit(stmt.body, env)  # methods aren't bare names in scope
+            else:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Call) and is_jit(node.func):
+                        for arg in node.args[:1]:
+                            name = _dotted(arg)
+                            tail = name.split(".")[-1] if name else None
+                            if tail in local:
+                                jitted.add(local[tail])
+
+    visit(tree.body, {})
     return jitted
+
+
+def _jitted_names(tree: ast.Module) -> set:
+    """Names of the jitted functions (see ``_jitted_nodes``)."""
+    return {n.name for n in _jitted_nodes(tree)}
 
 
 def check_traced_random_split(tree: ast.Module, path: str,
@@ -101,7 +124,7 @@ def check_traced_random_split(tree: ast.Module, path: str,
     the mesh shape changes.
     """
     rule = "traced-random-split"
-    jitted = _jitted_names(tree)
+    jitted = _jitted_nodes(tree)
     out: List[Finding] = []
 
     def scan(fn: ast.AST, owner: str) -> None:
@@ -115,10 +138,8 @@ def check_traced_random_split(tree: ast.Module, path: str,
                         f"function {owner!r}; split keys host-side and "
                         f"pass the batch in (PR 5 threefry-parity bug)"))
 
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                and node.name in jitted:
-            scan(node, node.name)
+    for node in jitted:
+        scan(node, node.name)
     return out
 
 
@@ -204,8 +225,58 @@ def check_import_time_jnp(tree: ast.Module, path: str,
     return out
 
 
+# --------------------------------------------------------------------------
+# rule: host-sync-in-program
+# --------------------------------------------------------------------------
+
+_HOST_SYNC_NP = ("np.asarray", "numpy.asarray", "np.array", "numpy.array")
+
+
+def check_host_sync_in_program(tree: ast.Module, path: str,
+                               src_lines: Sequence[str]) -> List[Finding]:
+    """No host synchronization on traced values inside jitted programs.
+
+    Motivated by the PR 6 incremental-loss-conversion bug class:
+    ``float(...)``, ``.item()`` and ``np.asarray(...)`` applied to a
+    traced value inside a jitted round/aggregation function either raise a
+    ``ConcretizationTypeError`` at trace time or — worse, when the value
+    is a closed-over constant — silently bake a stale host value into the
+    compiled program.  Host conversion belongs OUTSIDE the program, on its
+    returned arrays (as ``run_rounds``/``run_async`` do per merge).
+    """
+    rule = "host-sync-in-program"
+    jitted = _jitted_nodes(tree)
+    out: List[Finding] = []
+
+    def offending(node: ast.AST) -> Optional[str]:
+        if not isinstance(node, ast.Call):
+            return None
+        name = _dotted(node.func)
+        if name == "float" or name in _HOST_SYNC_NP:
+            return f"{name}(...)"
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args:
+            return ".item()"
+        return None
+
+    def scan(fn: ast.AST, owner: str) -> None:
+        for node in ast.walk(fn):
+            what = offending(node)
+            if what and not _suppressed(src_lines, node.lineno, rule):
+                out.append(Finding(
+                    path, node.lineno, node.col_offset, rule,
+                    f"{what} on a traced value inside jitted function "
+                    f"{owner!r} forces a host sync (or bakes in a stale "
+                    f"constant); convert on the program's OUTPUTS instead "
+                    f"(PR 6 incremental-loss-conversion bug)"))
+
+    for node in jitted:
+        scan(node, node.name)
+    return out
+
+
 RULES = (check_traced_random_split, check_bare_assert,
-         check_import_time_jnp)
+         check_import_time_jnp, check_host_sync_in_program)
 
 
 def lint_source(src: str, path: str = "<string>") -> List[Finding]:

@@ -1,0 +1,325 @@
+"""Static peak-live-bytes estimate of a scheduled HLO module.
+
+CPU/TPU modules compiled by XLA carry ``is_scheduled=true``: the instruction
+order inside each computation IS the buffer-assignment schedule, so a classic
+live-interval sweep over that order gives a static per-device peak — the
+module text of an SPMD-partitioned program is already the *per-device*
+program (shard-local shapes), which is what makes the estimate a per-device
+bound rather than a global one.
+
+Model (see ``README.md`` for the over/under-approximation discussion):
+
+  * Every instruction whose result is a fresh buffer contributes its result
+    bytes from its schedule position to its last use.  Tuple results count
+    the sum of their element shapes.
+  * **View ops** allocate nothing and forward liveness to their operands:
+    ``tuple`` / ``get-tuple-element`` / ``bitcast`` /
+    ``optimization-barrier``, any async ``*-done`` half, and — key for the
+    resident ping-pong — ``while``, whose carried buffers XLA updates in
+    place.  A use of a view is a use of every underlying allocation.
+  * **Parameters** are caller-owned and counted live for the whole program
+    (JAX keeps input buffers alive across the call; an early last-use frees
+    nothing on the device).
+  * **Donation** (``input_output_alias`` header): an aliased output reuses
+    its parameter's buffer, so the allocation backing that ROOT element is
+    collapsed to zero bytes.  This is the static proof that the donated
+    ping-pong round does NOT double-buffer the resident state.
+  * **Fusions** are atomic: internal temporaries are not modeled (XLA fuses
+    exactly so they never materialize); only the fusion result allocates.
+  * **Sub-computations** of ``while`` / ``conditional`` / ``call`` add their
+    internal peak (minus their parameter bytes, which alias the caller's
+    operands) as a transient at the call site.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from . import hlo
+
+# ops whose result shares / forwards its operands' buffers
+_VIEW_OPS = ("tuple", "get-tuple-element", "bitcast", "optimization-barrier",
+             "while")
+
+# ops whose sub-computations run with live caller state (transient peak);
+# fusion's ``calls=`` and reduce/scatter/sort's scalar ``to_apply`` are
+# deliberately NOT recursed
+_TRANSIENT_ATTRS = {
+    "while": ("body", "condition"),
+    "conditional": ("true_computation", "false_computation",
+                    "branch_computations"),
+    "call": ("to_apply",),
+}
+
+_CALLED_RE = re.compile(
+    r"(body|condition|true_computation|false_computation|to_apply|calls)"
+    r"=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_ALIAS_ENTRY_RE = re.compile(r"\{([\d,\s]*)\}:\s*\(\s*(\d+)\s*,")
+
+
+@dataclass(frozen=True)
+class Instr:
+    name: str
+    op: str
+    bytes: int
+    operands: Tuple[str, ...]
+    index: int
+    is_root: bool
+    called: Tuple[Tuple[str, str], ...]  # (attr, computation name)
+
+
+@dataclass(frozen=True)
+class MemoryEstimate:
+    """Static memory profile of one compiled (per-device) program.
+
+    peak_bytes        estimated peak live bytes at the worst schedule point
+    peak_index        schedule position of that peak (ENTRY instruction idx)
+    param_bytes       caller-supplied input bytes (live for the whole call)
+    output_bytes      fresh output bytes (non-donated ROOT allocations)
+    donated_collapsed bytes that donation aliasing removed from the peak
+    top               largest live buffers at the peak: ((name, bytes), ...)
+    """
+    peak_bytes: int
+    peak_index: int
+    param_bytes: int
+    output_bytes: int
+    donated_collapsed: int
+    top: Tuple[Tuple[str, int], ...]
+
+
+def _shape_bytes(fragment: str) -> int:
+    return sum(
+        _elems(dims) * hlo._DTYPE_BYTES.get(dt, 0)
+        for dt, dims in hlo.parse_shapes(fragment))
+
+
+def _elems(dims: Tuple[int, ...]) -> int:
+    e = 1
+    for d in dims:
+        e *= d
+    return e
+
+
+def _balanced(text: str, start: int) -> int:
+    """Index one past the paren group opening at ``text[start] == '('``."""
+    depth = 0
+    for j in range(start, len(text)):
+        if text[j] == "(":
+            depth += 1
+        elif text[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(text)
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_instr(line: str, index: int) -> Optional[Instr]:
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[len("ROOT "):].lstrip()
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        result, tail = rest[:end], rest[end:]
+    else:
+        m = re.match(r"\S+", rest)
+        if m is None:
+            return None
+        result, tail = m.group(0), rest[m.end():]
+    tail = tail.lstrip()
+    m = re.match(r"([a-zA-Z][\w\-]*)\(", tail)
+    if m is None:
+        return None
+    op = m.group(1)
+    span_end = _balanced(tail, m.end() - 1)
+    operands = tuple(_OPERAND_RE.findall(tail[m.end():span_end - 1]))
+    attrs = tail[span_end:]
+    called: List[Tuple[str, str]] = list(_CALLED_RE.findall(attrs))
+    bm = _BRANCHES_RE.search(attrs)
+    if bm:
+        called += [("branch_computations", c)
+                   for c in _OPERAND_RE.findall(bm.group(1))]
+    return Instr(name=name, op=op, bytes=_shape_bytes(result),
+                 operands=operands, index=index, is_root=is_root,
+                 called=tuple(called))
+
+
+def split_computations(txt: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    """{computation name: scheduled instruction list} and the ENTRY name."""
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[List[Instr]] = None
+    entry: Optional[str] = None
+    for line in txt.splitlines():
+        st = line.strip()
+        if cur is None:
+            if (st.endswith("{") and "->" in st
+                    and not st.startswith("HloModule")):
+                m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)", st)
+                if m is None:
+                    continue
+                cur = comps.setdefault(m.group(2), [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if st.startswith("}"):
+            cur = None
+            continue
+        instr = _parse_instr(line, len(cur))
+        if instr is not None:
+            cur.append(instr)
+    return comps, entry
+
+
+def _output_aliases(txt: str) -> Dict[Optional[int], int]:
+    """{ROOT tuple index (None = whole output): parameter number} from the
+    module's ``input_output_alias`` header."""
+    m = hlo._ALIAS_HDR_RE.search(txt)
+    if m is None:
+        return {}
+    out: Dict[Optional[int], int] = {}
+    for idx_str, param in _ALIAS_ENTRY_RE.findall(m.group(1)):
+        parts = [p for p in idx_str.replace(",", " ").split() if p]
+        out[int(parts[0]) if parts else None] = int(param)
+    return out
+
+
+class _Analyzer:
+    def __init__(self, comps: Dict[str, List[Instr]]):
+        self.comps = comps
+        self._peak_memo: Dict[str, Tuple[int, int]] = {}
+
+    def _resolve(self, comp: List[Instr], by_name: Dict[str, Instr],
+                 name: str, memo: Dict[str, FrozenSet[str]]
+                 ) -> FrozenSet[str]:
+        """Underlying allocated values a (possibly view) value refers to."""
+        if name in memo:
+            return memo[name]
+        memo[name] = frozenset()  # cycle guard (SSA: shouldn't trigger)
+        instr = by_name.get(name)
+        if instr is None:
+            out: FrozenSet[str] = frozenset()
+        elif instr.op in _VIEW_OPS or instr.op.endswith("-done"):
+            out = frozenset().union(*(
+                self._resolve(comp, by_name, o, memo)
+                for o in instr.operands)) if instr.operands else frozenset()
+        else:
+            out = frozenset((name,))
+        memo[name] = out
+        return out
+
+    def comp_profile(self, comp_name: str,
+                     aliases: Optional[Dict[Optional[int], int]] = None
+                     ) -> MemoryEstimate:
+        comp = self.comps.get(comp_name, [])
+        by_name = {i.name: i for i in comp}
+        n = len(comp)
+        memo: Dict[str, FrozenSet[str]] = {}
+        param_bytes = sum(i.bytes for i in comp if i.op == "parameter")
+        def_idx: Dict[str, int] = {}
+        last: Dict[str, int] = {}
+        bytes_of: Dict[str, int] = {}
+        for i in comp:
+            if i.op == "parameter":
+                continue
+            underlying = self._resolve(comp, by_name, i.name, memo)
+            if i.name in underlying:  # a real allocation
+                def_idx[i.name] = i.index
+                last[i.name] = i.index
+                bytes_of[i.name] = i.bytes
+            for o in i.operands:
+                for u in self._resolve(comp, by_name, o, memo):
+                    if u in last:
+                        last[u] = max(last[u], i.index)
+        root = next((i for i in comp if i.is_root), comp[-1] if comp else None)
+        donated = 0
+        if root is not None:
+            for u in self._resolve(comp, by_name, root.name, memo):
+                if u in last:
+                    last[u] = n
+            if aliases:
+                for out_idx, _param in aliases.items():
+                    target: Optional[str] = None
+                    if out_idx is None:
+                        target = root.name
+                    elif root.op == "tuple" and out_idx < len(root.operands):
+                        target = root.operands[out_idx]
+                    if target is None:
+                        continue
+                    for u in self._resolve(comp, by_name, target, memo):
+                        if u in bytes_of and bytes_of[u] > 0:
+                            donated += bytes_of[u]
+                            bytes_of[u] = 0
+                            break  # one buffer backs one output element
+        # transient internal peaks of control-flow sub-computations
+        transient = [0] * (n + 1)
+        for i in comp:
+            attrs = _TRANSIENT_ATTRS.get(i.op)
+            if not attrs:
+                continue
+            t = 0
+            for attr, callee in i.called:
+                if attr not in attrs or callee not in self.comps:
+                    continue
+                sub_peak, sub_params = self._sub_peak(callee)
+                t = max(t, max(0, sub_peak - sub_params))
+            transient[min(i.index, n)] += t
+
+        delta = [0] * (n + 2)
+        for u, b in bytes_of.items():
+            delta[def_idx[u]] += b
+            delta[last[u] + 1] -= b
+        delta[0] += param_bytes
+        peak, peak_idx, run = 0, 0, 0
+        for idx in range(n + 1):
+            run += delta[idx]
+            here = run + (transient[idx] if idx < len(transient) else 0)
+            if here > peak:
+                peak, peak_idx = here, idx
+        output_bytes = 0
+        if root is not None:
+            out_underlying = self._resolve(comp, by_name, root.name, memo)
+            output_bytes = sum(bytes_of.get(u, 0) for u in out_underlying)
+        top = sorted(
+            ((u, b) for u, b in bytes_of.items()
+             if b > 0 and def_idx[u] <= peak_idx <= last[u]),
+            key=lambda kv: -kv[1])[:5]
+        if peak_idx == 0 or param_bytes >= peak:
+            top = [("(parameters)", param_bytes)] + top
+        return MemoryEstimate(peak_bytes=peak, peak_index=peak_idx,
+                              param_bytes=param_bytes,
+                              output_bytes=output_bytes,
+                              donated_collapsed=donated,
+                              top=tuple(top[:5]))
+
+    def _sub_peak(self, comp_name: str) -> Tuple[int, int]:
+        if comp_name not in self._peak_memo:
+            self._peak_memo[comp_name] = (0, 0)  # cycle guard
+            est = self.comp_profile(comp_name)
+            self._peak_memo[comp_name] = (est.peak_bytes, est.param_bytes)
+        return self._peak_memo[comp_name]
+
+
+def analyze(txt: str) -> MemoryEstimate:
+    """Static per-device memory profile of a compiled module's ENTRY."""
+    comps, entry = split_computations(txt)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return _Analyzer(comps).comp_profile(entry, _output_aliases(txt))
+
+
+def peak_live_bytes(txt: str) -> int:
+    """Estimated per-device peak live bytes of a compiled module."""
+    return analyze(txt).peak_bytes

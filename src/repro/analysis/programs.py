@@ -125,7 +125,8 @@ def agg_report(mesh, m: int = 3) -> Report:
         use_kernel=True, interpret=True, mesh=mesh),
         out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
-    return agg_ops.accumulate_contract(index.n_padded, mesh).check(hlo=txt)
+    return agg_ops.accumulate_contract(index.n_padded, mesh,
+                                       rows=mp).check(hlo=txt)
 
 
 def admit_report(mesh, capacity: int = 3) -> Report:
@@ -145,12 +146,12 @@ def admit_report(mesh, capacity: int = 3) -> Report:
     c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
                        csh.cohort_sharding(mesh))
     keys = jax.random.split(jax.random.PRNGKey(0), rows)
-    slots = jnp.arange(rows, dtype=jnp.int32)
+    written = jnp.ones((rows,), dtype=jnp.int32)
     fn = async_round.make_admit_program(cfg, fl, index,
                                         any_malicious=False, mesh=mesh,
                                         rows=rows)
     txt = fn.lower(g, c, masks, gates, cms_in, mal, bpad, keys,
-                   slots).compile().as_text()
+                   written).compile().as_text()
     return async_round.admit_contract(index, mesh, rows=rows).check(hlo=txt)
 
 
@@ -182,7 +183,9 @@ def quantile_reports(m: int = 4, r: int = 8, length: int = 512,
                      trim: float = 0.95) -> List[Report]:
     """Trace both trimmed-norm paths on one (m, r, length) row block and
     check the jaxpr contracts: fused = 1 row read / 0 sorts, top_k tail =
-    the pinned 7 reads / 1 sort reference."""
+    the pinned 7 reads / 1 sort reference.  Both are also compiled so the
+    peak-live-bytes budget (a multiple of the row-block size) is checked
+    on the scheduled module."""
     import jax
     import jax.numpy as jnp
     from repro.core import flat
@@ -201,11 +204,15 @@ def quantile_reports(m: int = 4, r: int = 8, length: int = 512,
         _, sq = flat._rows_trimmed_stats(rows, q, trim, True, True)
         return jnp.sqrt(sq)
 
+    block_bytes = rows.size * rows.dtype.itemsize
     out = []
-    for contract, fn in ((q_ops.fused_quantile_contract(), fused),
-                         (q_ops.topk_tail_contract(), topk)):
+    for contract, fn in (
+            (q_ops.fused_quantile_contract(block_bytes), fused),
+            (q_ops.topk_tail_contract(block_bytes), topk)):
         jaxpr = jax.make_jaxpr(fn)(rows, q)
-        out.append(contract.check(jaxpr=jaxpr, row_elems=rows.size))
+        txt = jax.jit(fn).lower(rows, q).compile().as_text()
+        out.append(contract.check(jaxpr=jaxpr, hlo=txt,
+                                  row_elems=rows.size))
     return out
 
 

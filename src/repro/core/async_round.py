@@ -16,9 +16,14 @@ reduction, exactly like a mesh pad row).
 Two jitted programs per pool shape, sharing ``round._ROUND_CACHE``:
 
   * **admit** — vmapped local training of one dispatch group against the
-    current global, scattered into the group's slot rows
-    (``c_buf.at[slots].set``, out-of-bounds pad entries dropped); c_buf is
-    donated so admissions ping-pong one allocation.
+    current global, written into the group's slot rows.  The host lays the
+    group out in SLOT ORDER (client at pool slot j occupies row j of every
+    stacked argument; pad spec elsewhere), so the program just selects
+    ``where(written, trained, c_buf)`` row-wise — shard-local, zero
+    collectives, unlike the earlier ``c_buf.at[slots].set`` runtime-index
+    scatter that forced GSPMD to all-gather the whole pool (diagnosed by
+    ``analysis/blame``, fixed in PR 8).  c_buf is donated so admissions
+    ping-pong one allocation.
   * **merge** — ``flat.aggregate_buffers`` over the whole pool with the
     per-row staleness-discounted weights; g_buf is donated, the pool
     buffer is read-only (unmerged in-flight rows survive).
@@ -123,24 +128,30 @@ def staleness_weight(s, acfg: AsyncConfig) -> np.ndarray:
 
 
 def admit_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
-    """Declared contract of the admit program.
+    """Declared contract of the admit program: ZERO all-gathers.
 
     The donated pool buffer (flattened param 1; param 0 is the NON-donated
-    g_buf) must alias — admissions ping-pong one allocation.  The slot
-    scatter (``c_buf.at[slots].set``) carries RUNTIME slot indices, so
-    GSPMD cannot prove it shard-local and re-layouts the pool across the
-    data axis once: the compiled program contains up to one full-pool
-    all-gather (at most 2 all-gathers total).  The contract pins that
-    known cost so growth shows up; removing it (static per-dispatch slot
-    shapes, or an all-to-all permutation) is a ROADMAP follow-up.  The
-    zero-all-gather invariant proper lives on the AGGREGATION paths
-    (``merge_contract`` and the round/agg contracts)."""
+    g_buf) must alias — admissions ping-pong one allocation.  PR 7 had to
+    pin <= 2 all-gathers here: the ``c_buf.at[slots].set`` scatter carried
+    RUNTIME slot indices, so GSPMD could not prove it shard-local and
+    re-gathered the full pool (``analysis/blame`` attributed both gathers
+    to that one scatter line).  The host now lays each dispatch group out
+    in slot order and the program writes rows with an elementwise
+    ``where(written, ...)`` select — shard-local by construction, so the
+    bound drops to exactly 0 and the pool never materializes anywhere
+    (``full_cohort_gathers == 0`` over >= rows*N payloads).  Peak budget
+    ``(2 + 5*r) * N * 4`` bytes/device (r = pool rows per data shard):
+    the pool shard, the replicated global and the per-row training
+    temporaries — measured ~5 N-multiples on the canonical fixture."""
     from repro.analysis.contracts import Contract
+    r = max(1, rows // cohort_sh.data_shards(mesh))
     return Contract(
         name="async/admit",
-        description="admit: train dispatch group, scatter into pool slots",
-        all_gathers=(0, 2), full_cohort_gathers=(0, 1),
-        cohort_elems=rows * index.n_padded, donated=frozenset({1}))
+        description="admit: train dispatch group, select into pool slots",
+        all_gathers=0, full_cohort_gathers=0,
+        cohort_elems=rows * index.n_padded,
+        peak_live_bytes_per_device=(None, (2 + 5 * r) * index.n_padded * 4),
+        donated=frozenset({1}))
 
 
 def merge_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
@@ -148,16 +159,21 @@ def merge_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
     aggregates the whole-row P("data") pool with ZERO all-gathers (the
     invariant the slot-pool layout decision preserves — same aggregation
     tail as the resident round) and >= 1 N-sized (M', γ) psum on a
-    multi-device mesh; the donated g_buf (param 0) must alias."""
+    multi-device mesh; the donated g_buf (param 0) must alias.  Peak
+    budget ``(6 + 12*r) * N * 4`` bytes/device like the aggregation
+    contract (same tail; measured ~11 N-multiples on the fixture)."""
     from repro.analysis.contracts import Contract
     multi = mesh is not None and mesh.size > 1
+    r = max(1, rows // cohort_sh.data_shards(mesh))
     kw = {}
     if multi and cohort_sh.model_shards(mesh) == 1:
         kw = dict(scale_allreduces=(1, None), scale_elems=index.n_padded)
     return Contract(
         name="async/merge",
         description="merge: staleness-weighted aggregation over the pool",
-        all_gathers=0, donated=frozenset({0}), **kw)
+        all_gathers=0,
+        peak_live_bytes_per_device=(None, (6 + 12 * r) * index.n_padded * 4),
+        donated=frozenset({0}), **kw)
 
 
 def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
@@ -165,14 +181,19 @@ def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
     """Build (or fetch) the jitted admit program for one pool shape:
 
       (g_buf (N,), c_buf (rows, N), masks, gates, cms, mal, batches,
-       keys, slots (rows,) int32) -> (c_buf' (rows, N), losses (rows,))
+       keys, written (rows,) int32) -> (c_buf' (rows, N), losses (rows,))
 
-    Trains the dispatch group (padded to ``rows``) against the CURRENT
-    global and scatters its updates into the pool at ``slots``; pad
-    entries point at index ``rows`` (out of bounds) and are dropped, so
-    untouched pool rows pass through.  c_buf is donated (admissions
-    ping-pong one allocation); g_buf is NOT (the merge donates it).
-    Cached in ``round._ROUND_CACHE`` alongside the resident programs.
+    All stacked arguments arrive in SLOT ORDER (the engine places each
+    dispatched client at its pool-slot row, pad spec elsewhere); the
+    program trains every row against the CURRENT global and keeps the
+    trained row where ``written`` is set, the existing pool row where it
+    is not.  The select is elementwise along the sharded row axis, so it
+    lowers with zero collectives — the re-gather the old runtime-index
+    scatter forced is structurally impossible.  Rows are position-
+    independent under vmap, so each client's update is bit-identical to
+    the dispatch-ordered layout.  c_buf is donated (admissions ping-pong
+    one allocation); g_buf is NOT (the merge donates it).  Cached in
+    ``round._ROUND_CACHE`` alongside the resident programs.
     """
     key = ("admit", index, cfg, round_mod._fl_static(fl),
            bool(any_malicious), round_mod._mesh_key(mesh), rows)
@@ -181,14 +202,14 @@ def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
         round_mod._ROUND_CACHE.move_to_end(key)
         return fn
 
-    def _admit(g_buf, c_buf, masks, gates, cms, mal, batches, keys, slots):
+    def _admit(g_buf, c_buf, masks, gates, cms, mal, batches, keys, written):
         g = flat.unflatten(index, g_buf)
         updated, losses = cohort_update(
             g, cfg, fl, masks, gates, batches, cms, mal, keys,
             any_malicious=any_malicious)
         x = cohort_sh.constrain_cohort(
             flat.flatten_stacked(index, updated), mesh)
-        c_new = c_buf.at[slots].set(x, mode="drop")
+        c_new = jnp.where((written != 0)[:, None], x, c_buf)
         return cohort_sh.constrain_cohort(c_new, mesh), losses
 
     jit_kw = {}
@@ -394,30 +415,42 @@ class AsyncEngine:
         slots, specs, batches, gkey = self._pending
         self._pending = None
         b = len(specs)
-        runtimes = stack_runtimes(self.cfg, specs)
-        pad = self.rows - b
-        if pad:
-            runtimes, batches = cohort_sh.pad_cohort(runtimes, batches, pad)
-        masks, gates, _gmaps, _nd, cms, mal = runtimes
+        slots = np.asarray(slots)
+        # slot-ordered layout: row j of every stacked argument belongs to
+        # pool slot j — the dispatched client at slot j lands on row j, all
+        # other rows carry the pad spec.  vmapped rows are position-
+        # independent, so each client trains the same bits as the old
+        # dispatch-ordered layout; the program then overwrites exactly the
+        # ``written`` rows with a shard-local select (no runtime-index
+        # scatter, no GSPMD re-gather — see admit_contract).
+        order = np.full(self.rows, b, np.int64)  # unwritten rows -> pad entry
+        order[slots] = np.arange(b)
+        slot_specs = [self._pad_spec] * self.rows
+        for i, j in enumerate(slots):
+            slot_specs[int(j)] = specs[i]
+        masks, gates, _gmaps, _nd, cms, mal = \
+            stack_runtimes(self.cfg, slot_specs)
         cms_in = default_class_masks(cms, self.cfg, self.fl, self.rows)
-        # host-side per-client keys, real rows only (pad rows reuse key 0) —
-        # matches flat_round so parity dispatches consume identical bits
-        keys = jax.random.split(gkey, b)
-        if pad:
-            keys = jnp.concatenate(
-                [keys, jnp.broadcast_to(keys[:1],
-                                        (pad,) + keys.shape[1:])])
-        slot_map = np.full((self.rows,), self.rows, np.int32)  # pads -> OOB
-        slot_map[:b] = slots
+        # host-side per-client keys: client i keeps split(gkey)[i] wherever
+        # its slot row lands; unwritten rows reuse key 0 (the resident
+        # round's pad-row convention)
+        keys_b = jax.random.split(gkey, b)
+        keys = jnp.concatenate([keys_b, keys_b[:1]])[order]
+        batches_row = jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.broadcast_to(a[:1], (1,) + a.shape[1:])])[order],
+            batches)
+        written = np.zeros(self.rows, np.int32)
+        written[slots] = 1
         fn = make_admit_program(
             self.cfg, self.fl, self.index,
             any_malicious=any(s.malicious for s in specs),
             mesh=self.mesh, rows=self.rows)
         self._ensure_cbuf()
         self._c_buf, losses = fn(self.g_buf, self._c_buf, masks, gates,
-                                 cms_in, mal, batches, keys,
-                                 jnp.asarray(slot_map))
-        self.pool.loss[slots] = np.asarray(losses)[:b]
+                                 cms_in, mal, batches_row, keys,
+                                 jnp.asarray(written))
+        self.pool.loss[slots] = np.asarray(losses)[slots]
 
     def _merge(self, ready: np.ndarray) -> Optional[float]:
         pool, acfg = self.pool, self.acfg

@@ -129,27 +129,47 @@ def round_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
     """The resident round program's declared contract (see
     ``repro.analysis.contracts``), for a cohort padded to ``rows``.
 
-    Always: the full (rows, N) cohort is never all-gathered, and both
+    Always: the full (rows, N) cohort is never all-gathered, both
     resident buffers (params 0 = g_buf, 1 = cohort scratch) must have
-    materialized donation aliases (the ping-pong).  On a multi-device
-    data-only mesh the round has NO legitimate all-gather at all and the
-    (M', γ) partial sums show up as >= 1 N-sized all-reduce.  With model
-    shards the strict communication bounds live on the aggregation path
-    contract (``kernels.fedfa_agg.ops.accumulate_contract``) — GSPMD may
-    re-layout *training* intermediates over the idle model axis, so the
-    full-round gather/reduce counts are deliberately looser here.
+    materialized donation aliases (the ping-pong), and the statically
+    estimated per-device peak live bytes stay within a budget of
+    ``(6 + 12*r) * N * 4`` where r is the per-data-shard row count —
+    the resident state plus the vmapped training temporaries (grads,
+    optimizer state, re-layout copies), measured ~11-16 N-multiples on
+    the canonical fixture, with ~1.6x headroom.  A dropped donation or
+    an accidentally materialized cohort replica blows the budget.
+
+    On a multi-device data-only mesh the round has NO legitimate
+    all-gather at all and the (M', γ) partial sums show up as >= 1
+    N-sized all-reduce.  With model shards the strict communication
+    bounds live on the aggregation path contract
+    (``kernels.fedfa_agg.ops.accumulate_contract``); the *training*-side
+    re-layout collectives GSPMD emits over the idle model axis are now
+    bounded too (the PR 7 follow-up (c) — ``analysis/blame`` attributes
+    them to the segment concatenates in ``flat.py``, the mask
+    multiplies in ``masking.py`` and the optimizer all-to-alls): the
+    measured inventory on the canonical 2x2 fixture is 38 all-gathers /
+    24 all-to-alls / 12 collective-permutes, ceilinged at ~1.7x, and no
+    single all-gather may exceed one full (N,) model row — a
+    cohort-sized gather stays structurally impossible.
     """
     from repro.analysis.contracts import Contract
     multi = mesh is not None and mesh.size > 1
     ms = cohort_sh.model_shards(mesh)
+    r = max(1, rows // cohort_sh.data_shards(mesh))
     kw: Dict[str, Any] = {}
     if multi and ms == 1:
         kw = dict(all_gathers=0, scale_allreduces=(1, None),
                   scale_elems=index.n_padded)
+    elif multi:
+        kw = dict(all_gathers=(None, 64), all_to_alls=(None, 48),
+                  collective_permutes=(None, 24), reduce_scatters=(2, 8),
+                  max_all_gather_elems=index.n_padded)
     return Contract(
         name=f"round/ms{ms}",
         description="resident round: donated ping-pong, no cohort gather",
         full_cohort_gathers=0, cohort_elems=rows * index.n_padded,
+        peak_live_bytes_per_device=(None, (6 + 12 * r) * index.n_padded * 4),
         donated=frozenset({0, 1}), **kw)
 
 

@@ -53,7 +53,7 @@ def _accum_local(x: jax.Array, weights: jax.Array, mask: jax.Array,
     return out[:n]
 
 
-def accumulate_contract(n_padded: int, mesh=None):
+def accumulate_contract(n_padded: int, mesh=None, rows=None):
     """Declared contract of the aggregation path built on ``accumulate``
     (``flat.aggregate_buffers`` lowered standalone on the round's own
     shardings — see ``repro.analysis.contracts``).
@@ -65,15 +65,26 @@ def accumulate_contract(n_padded: int, mesh=None):
     **reduce-scatter** over ``model`` (>= 1) and every N-scale all-reduce
     carries exactly ``n_padded / n_model`` elements — the per-device
     communication volume the 2-D sharding exists to bound.
+
+    With ``rows`` (the padded cohort row count) the contract also budgets
+    the statically estimated per-device peak at ``(6 + 12*r) * N * 4``
+    bytes, r = rows per data shard — the cohort shard plus the grafting /
+    trimmed-norm / partial-sum intermediates (measured ~11-15 N-multiples
+    on the canonical fixture; a replicated cohort blows it).
     """
     from repro.analysis.contracts import Contract
-    from repro.sharding.cohort import model_shards
+    from repro.sharding.cohort import data_shards, model_shards
     multi = mesh is not None and mesh.size > 1
     ms = model_shards(mesh)
+    peak = {}
+    if rows is not None:
+        r = max(1, rows // data_shards(mesh))
+        peak = dict(
+            peak_live_bytes_per_device=(None, (6 + 12 * r) * n_padded * 4))
     if not multi:
         return Contract(name="agg/1dev",
                         description="aggregation path, single device",
-                        all_gathers=0)
+                        all_gathers=0, **peak)
     scale = n_padded // ms
     kw = dict(allreduce_max_elems=scale, scale_allreduces=(1, 2),
               scale_elems=scale)
@@ -82,7 +93,7 @@ def accumulate_contract(n_padded: int, mesh=None):
     return Contract(
         name=f"agg/ms{ms}",
         description="aggregation path: partial sums, no cohort re-gather",
-        all_gathers=0, **kw)
+        all_gathers=0, **kw, **peak)
 
 
 @functools.partial(jax.jit,

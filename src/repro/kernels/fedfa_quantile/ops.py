@@ -25,29 +25,40 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def fused_quantile_contract():
+def fused_quantile_contract(block_bytes=None):
     """Declared contract of the fused trimmed-quantile path (PR 4): the
     whole (threshold, trimmed Σw²) computation is ONE pallas_call, so the
     traced program reads the cohort row block exactly once and contains
     zero sort/top_k ops — the 31-step count-and-partition refinement
     happens in VMEM.  Checked on the jaxpr (``row_reads``/``sorts``), not
-    on timing; see ``repro.analysis.jaxpr`` for the counting rules."""
+    on timing; see ``repro.analysis.jaxpr`` for the counting rules.
+
+    With ``block_bytes`` (the (R, L) row-block byte size) the compiled
+    program's statically estimated peak is budgeted at 6x the block —
+    the block, its |.| copy and the interpret-mode staging buffers
+    (measured ~4x on the canonical fixture).  A path that re-materializes
+    per-refinement-step copies of the block blows it."""
     from repro.analysis.contracts import Contract
+    peak = {} if block_bytes is None else dict(
+        peak_live_bytes_per_device=(None, 6 * block_bytes))
     return Contract(name="quantile/fused",
                     description="fused Pallas trimmed quantile",
-                    row_reads=1, sorts=0)
+                    row_reads=1, sorts=0, **peak)
 
 
-def topk_tail_contract():
+def topk_tail_contract(block_bytes=None):
     """Declared shape of the top_k tail path the fused kernel replaced —
     kept as a pinned reference point: 7 row-block reads (abs, sort,
     compare, square-reduce chain) and exactly 1 sort.  If a jax upgrade
     shifts these counts the benchmark's fused-vs-topk comparison basis
-    moved and the numbers need re-anchoring."""
+    moved and the numbers need re-anchoring.  ``block_bytes`` budgets the
+    compiled peak at 4x the block (measured ~2.1x)."""
     from repro.analysis.contracts import Contract
+    peak = {} if block_bytes is None else dict(
+        peak_live_bytes_per_device=(None, 4 * block_bytes))
     return Contract(name="quantile/topk",
                     description="top_k tail path (pre-PR 4 reference)",
-                    row_reads=7, sorts=1)
+                    row_reads=7, sorts=1, **peak)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))

@@ -130,24 +130,25 @@ def round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
 def async_admit_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
     """(in_shardings, out_shardings) for the async engine's admit program
 
-      (g_buf, c_buf, masks, gates, cms, mal, batches, keys, slots)
+      (g_buf, c_buf, masks, gates, cms, mal, batches, keys, written)
         -> (c_buf', losses)
 
     (``repro.core.async_round.make_admit_program``).  The slot-pool c_buf
     stays in the whole-row P("data") ``cohort_sharding`` layout — NOT the
-    resident 2-D P("data", "model") layout — because the admit scatter
-    writes whole rows at data-replicated slot indices and the merge's
+    resident 2-D P("data", "model") layout — because the merge's
     trimmed-norm pass reads whole (client, segment) rows; re-slicing N
     between admits would force an all-gather back to whole rows inside the
     merge's aggregation, breaking the zero-all-gather invariant the
     benchmarks gate.  (A distributed quantile would lift this — ROADMAP
-    follow-up.)  Dispatch-stacked training arguments shard over ``data``
-    like the resident round; the (rows,) slot map is replicated (every
-    data shard needs the full scatter destination set).
+    follow-up.)  Every stacked argument — including the (rows,) ``written``
+    row mask — arrives in slot order and shards over ``data`` like the
+    resident round, so the admit select is elementwise per data shard and
+    the whole program lowers with zero collectives (``admit_contract``;
+    the replicated runtime-index slot map that used to force a full-pool
+    re-gather is gone).
     """
-    co, rep, gl = cohort_sharding(mesh), replicated(mesh), \
-        global_sharding(mesh)
-    return ((gl, co, co, co, co, co, co, co, rep), (co, co))
+    co, gl = cohort_sharding(mesh), global_sharding(mesh)
+    return ((gl, co, co, co, co, co, co, co, co), (co, co))
 
 
 def async_merge_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:

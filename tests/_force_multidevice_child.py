@@ -29,9 +29,11 @@ OK``.
 
 With ``--async`` it runs the async engine under the 4-device data mesh:
 parity-mode bit-equality with the sharded ``run_rounds`` (fedfa +
-heterofl), skewed-trace bounded-staleness merges, zero all-gathers in the
-lowered merge program, and the ``ResidentDriver._cbufs`` padded-key
-regression.  Prints ``ASYNC OK``.
+heterofl), skewed-trace bounded-staleness merges, the declared merge AND
+admit contracts on the lowered programs (zero all-gathers in both — the
+admit is a slot-order select since PR 8 — plus the peak-live-bytes
+budgets), and the ``ResidentDriver._cbufs`` padded-key regression.
+Prints ``ASYNC OK``.
 """
 import sys
 
@@ -83,10 +85,13 @@ if "--quantile-collectives" in sys.argv:
     txt = fn.lower(g, x, nd).compile().as_text()
 
     from repro.kernels.fedfa_agg.ops import accumulate_contract
-    rep = accumulate_contract(index.n_padded, MESH).check(hlo=txt)
+    rep = accumulate_contract(index.n_padded, MESH,
+                              rows=M + pad).check(hlo=txt)
     assert rep.ok, rep.violations
+    assert rep.measured["peak_live_bytes_per_device"] > 0
     n_psum = rep.measured["scale_allreduces"]
-    print(f"collectives: all-gather=0 n-sized-all-reduce={n_psum}")
+    print(f"collectives: all-gather=0 n-sized-all-reduce={n_psum} "
+          f"peak={rep.measured['peak_live_bytes_per_device']}B")
     print("QUANTILE COLLECTIVES OK")
     sys.exit(0)
 
@@ -110,12 +115,15 @@ if "--agg-collectives-2d" in sys.argv:
         out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
     from repro.kernels.fedfa_agg.ops import accumulate_contract
-    rep = accumulate_contract(index.n_padded, mesh).check(hlo=txt)
+    rep = accumulate_contract(index.n_padded, mesh,
+                              rows=M + pad).check(hlo=txt)
     assert rep.ok, rep.violations
+    assert rep.measured["peak_live_bytes_per_device"] > 0
     n_rs = rep.measured["reduce_scatters"]
     n_half_ars = rep.measured["scale_allreduces"]
     print(f"collectives 2d: all-gather=0 reduce-scatter={n_rs} "
-          f"n/2-all-reduce={n_half_ars}")
+          f"n/2-all-reduce={n_half_ars} "
+          f"peak={rep.measured['peak_live_bytes_per_device']}B")
     print("AGG COLLECTIVES 2D OK")
     sys.exit(0)
 
@@ -258,7 +266,30 @@ if "--async" in sys.argv:
     txt = fn.lower(g, c, masks, gates, gmaps, w).compile().as_text()
     rep = merge_contract(index, MESH, rows=rows).check(hlo=txt)
     assert rep.ok, rep.violations
+    assert rep.measured["peak_live_bytes_per_device"] > 0
     print("async merge collectives: all-gather=0 OK")
+
+    # --- admit program collective structure: the slot-order select admits
+    # with ZERO all-gathers (PR 8 killed the c_buf.at[slots].set scatter
+    # whose runtime indices made GSPMD re-gather the full pool) and stays
+    # inside the (2 + 5r)·N·4 peak budget
+    from repro.core.async_round import admit_contract, make_admit_program
+    from repro.core.server import default_class_masks
+    _, batches_a = data_fn(0)
+    (masks_a, gates_a, _, _, cms_a, mal_a), bpad_a = csh.pad_cohort(
+        stack_runtimes(CFG, SPECS), batches_a, rows - M)
+    cms_in = default_class_masks(cms_a, CFG, fl_k, rows)
+    keys_a = jax.random.split(KEY, rows)
+    written = jnp.ones((rows,), jnp.int32)
+    fn_a = make_admit_program(CFG, fl_k, index, any_malicious=False,
+                              mesh=MESH, rows=rows)
+    txt_a = fn_a.lower(g, c, masks_a, gates_a, cms_in, mal_a, bpad_a,
+                       keys_a, written).compile().as_text()
+    rep_a = admit_contract(index, MESH, rows=rows).check(hlo=txt_a)
+    assert rep_a.ok, rep_a.violations
+    assert rep_a.measured["all_gathers"] == 0
+    assert rep_a.measured["peak_live_bytes_per_device"] > 0
+    print("async admit collectives: all-gather=0 OK")
 
     # --- _cbufs regression: under the mesh, m=3 and m=4 cohorts both pad
     # to 4 rows and must ping-pong ONE scratch allocation (the old code

@@ -1,0 +1,24 @@
+"""Planted lint fixture: host syncs on traced values inside a jitted
+program (the PR 6 incremental-loss-conversion bug class).  NEVER import
+this module — ``tests/test_analysis.py`` feeds its source to the linter
+and asserts the ``host-sync-in-program`` findings below (and that the
+``# noqa`` escape suppresses one)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_bad_program(index):
+    def _round(g_buf, losses):
+        total = float(losses.sum())          # BAD: host sync at trace time
+        mean = losses.mean().item()          # BAD: .item() on traced value
+        snap = np.asarray(g_buf)             # BAD: device->host copy
+        ok = np.asarray(losses)  # noqa: host-sync-in-program
+        return g_buf * total + mean + snap.shape[0] + ok.shape[0]
+
+    return jax.jit(_round, donate_argnums=(0,))
+
+
+def host_side_is_fine(losses):
+    # NOT jitted: converting on program outputs is exactly the fix
+    return float(np.asarray(losses).mean())

@@ -341,3 +341,271 @@ def test_depth_gates_reject_bad_section_depths_with_value():
         depth_gates(cfg, (0,) + full[1:])
     with pytest.raises(ValueError, match=f"depth {full[0] + 1} invalid"):
         depth_gates(cfg, (full[0] + 1,) + full[1:])
+
+
+# ---------------------------------------------------------------------------
+# hlo: metadata / provenance parsing + parser edge cases
+# ---------------------------------------------------------------------------
+
+def test_hlo_parse_metadata_fields():
+    line = ('  %ag = f32[64]{0} all-gather(f32[16]{0} %x), '
+            'metadata={op_name="jit(round)/jit(main)/scatter" '
+            'source_file="/a/b/async_round.py" source_line=191}')
+    md = hlo.parse_metadata(line)
+    assert md == {"op_name": "jit(round)/jit(main)/scatter",
+                  "source_file": "/a/b/async_round.py",
+                  "source_line": 191}
+    assert hlo.parse_metadata("%a = f32[8]{0} add(%x, %y)") == {}
+
+
+def test_hlo_collectives_carry_provenance():
+    txt = ('  %ag = f32[64]{0} all-gather(f32[16]{0} %x), '
+           'metadata={op_name="jit(f)/gather" '
+           'source_file="/p/q/round.py" source_line=42}\n'
+           '  %ar = f32[8]{0} all-reduce(f32[8]{0} %y)\n')
+    ops = hlo.collectives(txt)
+    ag = next(op for op in ops if op.kind == "all-gather")
+    assert (ag.op_name, ag.source_file, ag.source_line) \
+        == ("jit(f)/gather", "/p/q/round.py", 42)
+    ar = next(op for op in ops if op.kind == "all-reduce")
+    assert ar.op_name is None and ar.source_line is None
+
+
+def test_hlo_multi_operand_fusion_and_mixed_dtype_tuples():
+    # a tuple-result async start mixing bf16 payload and u32 flag: the
+    # payload is the max over FLOAT shapes, and bytes respect the dtype
+    txt = ('  %s = (bf16[256]{0}, u32[4]{0}) all-reduce-start'
+           '(bf16[256]{0} %x)\n'
+           '  %d = bf16[256]{0} all-reduce-done'
+           '((bf16[256]{0}, u32[4]{0}) %s)\n')
+    ops = hlo.collectives(txt, strict=True)
+    assert len(ops) == 1 and ops[0].elems == 256
+    assert hlo.byte_totals(txt)["all-reduce"] == 256 * 2 + 4 * 4
+    # multi-operand fusion result shapes parse (nested tuple + layouts)
+    line = ('%f = (f32[8,4]{1,0:T(256)}, u32[2]{0}) fusion'
+            '(f32[8,4]{1,0} %a, f32[4]{0} %b, u32[2]{0} %c), kind=kLoop')
+    assert hlo.result_elems(line) == 32
+
+
+def test_hlo_donation_aliases_on_tuple_outputs():
+    hdr = ("HloModule m, input_output_alias={ {0}: (0, {}, must-alias), "
+           "{2}: (3, {}, may-alias) }\n")
+    assert hlo.donated_params(hdr) == {0: "must-alias", 3: "may-alias"}
+    from repro.analysis import memory
+    assert memory._output_aliases(hdr) == {0: 0, 2: 3}
+
+
+# ---------------------------------------------------------------------------
+# memory: the static liveness analyzer
+# ---------------------------------------------------------------------------
+
+from repro.analysis import blame, memory  # noqa: E402
+
+# f32[100] p0 (400 B) + f32[50] p1 (200 B) params; an 800 B concatenate
+# live until the slice consumes it; the 400 B ROOT element 0 is donated
+# back onto p0 (collapsed); a 100 B slice survives to the output.
+MEM_SAMPLE = """\
+HloModule jit_f, is_scheduled=true, input_output_alias={ {0}: (0, {}, must-alias) }
+
+ENTRY %main (p0: f32[100], p1: f32[50]) -> (f32[100], f32[25]) {
+  %p0 = f32[100]{0} parameter(0)
+  %p1 = f32[50]{0} parameter(1)
+  %big = f32[200]{0} concatenate(f32[100]{0} %p0, f32[50]{0} %p1), dimensions={0}
+  %a = f32[100]{0} add(f32[100]{0} %p0, f32[100]{0} %p0)
+  %s = f32[25]{0} slice(f32[200]{0} %big), slice={[0:25]}
+  ROOT %t = (f32[100]{0}, f32[25]{0}) tuple(f32[100]{0} %a, f32[25]{0} %s)
+}
+"""
+
+
+def test_memory_liveness_peak_and_donation_collapse():
+    est = memory.analyze(MEM_SAMPLE)
+    # at the slice: params (600) + big (800, freed after) + s (100); the
+    # donated %a is collapsed to zero
+    assert est.peak_bytes == 1500
+    assert est.param_bytes == 600
+    assert est.donated_collapsed == 400
+    assert est.output_bytes == 100          # only the fresh slice
+    names = [n for n, _ in est.top]
+    assert "big" in names
+    # without the donation header the 400 B add stays allocated
+    undonated = MEM_SAMPLE.replace(
+        ", input_output_alias={ {0}: (0, {}, must-alias) }", "")
+    est2 = memory.analyze(undonated)
+    assert est2.peak_bytes == 1900
+    assert est2.donated_collapsed == 0
+    assert memory.peak_live_bytes(undonated) == 1900
+
+
+def test_memory_view_ops_are_free_and_params_live_throughout():
+    txt = """\
+HloModule m, is_scheduled=true
+
+ENTRY %e (p0: f32[100]) -> f32[100] {
+  %p0 = f32[100]{0} parameter(0)
+  %t = (f32[100]{0}) tuple(f32[100]{0} %p0)
+  %g = f32[100]{0} get-tuple-element((f32[100]{0}) %t), index=0
+  %b = f32[100]{0} bitcast(f32[100]{0} %g)
+  ROOT %o = f32[100]{0} optimization-barrier(f32[100]{0} %b)
+}
+"""
+    est = memory.analyze(txt)
+    assert est.peak_bytes == 400            # just the parameter
+    assert est.output_bytes == 0            # output aliases the input view
+
+
+def test_memory_while_subcomputation_transient():
+    txt = """\
+HloModule m, is_scheduled=true
+
+%body.2 (pb: (f32[100], s32[])) -> (f32[100], s32[]) {
+  %pb = (f32[100]{0}, s32[]) parameter(0)
+  %gb = f32[100]{0} get-tuple-element((f32[100]{0}, s32[]) %pb), index=0
+  %tmp = f32[100]{0} multiply(f32[100]{0} %gb, f32[100]{0} %gb)
+  %ib = s32[] get-tuple-element((f32[100]{0}, s32[]) %pb), index=1
+  ROOT %rb = (f32[100]{0}, s32[]) tuple(f32[100]{0} %tmp, s32[] %ib)
+}
+
+%cond.3 (pc: (f32[100], s32[])) -> pred[] {
+  %pc = (f32[100]{0}, s32[]) parameter(0)
+  %ic = s32[] get-tuple-element((f32[100]{0}, s32[]) %pc), index=1
+  %c5 = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %ic, s32[] %c5), direction=LT
+}
+
+ENTRY %main (p0: f32[100]) -> f32[100] {
+  %p0 = f32[100]{0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (f32[100]{0}, s32[]) tuple(f32[100]{0} %p0, s32[] %z)
+  %w = (f32[100]{0}, s32[]) while((f32[100]{0}, s32[]) %init), condition=%cond.3, body=%body.2
+  ROOT %out = f32[100]{0} get-tuple-element((f32[100]{0}, s32[]) %w), index=0
+}
+"""
+    est = memory.analyze(txt)
+    # params 400 + constant 4 + the body's 400 B %tmp transient at the
+    # while; the while itself allocates nothing (in-place carry)
+    assert est.peak_bytes == 804
+    body = memory.split_computations(txt)[0]["body.2"]
+    assert [i.op for i in body][0] == "parameter"
+
+
+def test_memory_requires_entry():
+    with pytest.raises(ValueError, match="ENTRY"):
+        memory.analyze("HloModule m\n")
+
+
+def test_memory_peak_contract_bound_fails_with_top_buffers():
+    c = Contract(name="m", peak_live_bytes_per_device=(None, 1000))
+    rep = c.check(hlo=MEM_SAMPLE)
+    assert not rep.ok
+    v = rep.violations[0]
+    assert "peak_live_bytes_per_device" in v and "1500" in v
+    assert "largest live buffers" in v
+    ok = Contract(name="m2", peak_live_bytes_per_device=(None, 2000)) \
+        .check(hlo=MEM_SAMPLE)
+    assert ok.ok and ok.measured["peak_live_bytes_per_device"] == 1500
+
+
+# ---------------------------------------------------------------------------
+# blame: collective-to-source attribution
+# ---------------------------------------------------------------------------
+
+BLAME_SAMPLE = (
+    '  %ag0 = f32[1024]{0} all-gather(f32[256]{0} %x), '
+    'metadata={op_name="jit(admit)/jit(main)/scatter" '
+    'source_file="/repo/src/repro/core/async_round.py" source_line=191}\n'
+    '  %ag1 = f32[1024]{0} all-gather(f32[256]{0} %y), '
+    'metadata={op_name="jit(admit)/jit(main)/scatter" '
+    'source_file="/repo/src/repro/core/async_round.py" source_line=191}\n'
+    '  %ar0 = f32[64]{0} all-reduce(f32[64]{0} %z), '
+    'metadata={op_name="jit(round)/add" '
+    'source_file="/repo/src/repro/core/flat.py" source_line=190}\n'
+    '  %cp = f32[8]{0} collective-permute(f32[8]{0} %w)\n')
+
+
+def test_blame_table_groups_by_source_line():
+    rows = blame.blame_table(BLAME_SAMPLE)
+    assert rows[0].kind == "all-gather"
+    assert rows[0].source == "async_round.py:191"
+    assert rows[0].count == 2 and rows[0].total_elems == 2048
+    assert rows[0].op_name == "scatter"
+    unattributed = next(r for r in rows if r.kind == "collective-permute")
+    assert unattributed.source is None
+
+
+def test_blame_describe_and_format():
+    ops = hlo.collectives(BLAME_SAMPLE)
+    d = blame.describe(ops[0])
+    assert d == "all-gather[1024] scatter (async_round.py:191)"
+    d2 = blame.describe(next(o for o in ops
+                             if o.kind == "collective-permute"))
+    assert "(no provenance)" in d2
+    lines = blame.format_blame(BLAME_SAMPLE, kinds=["all-gather"])
+    assert len(lines) == 1 and "x2" in lines[0] \
+        and "async_round.py:191" in lines[0]
+
+
+def test_contract_violation_names_blamed_source_line():
+    c = Contract(name="t", all_gathers=0)
+    rep = c.check(hlo=BLAME_SAMPLE)
+    assert not rep.ok
+    assert "async_round.py:191" in rep.violations[0]
+    assert rep.blame and rep.blame[0].source == "async_round.py:191"
+
+
+def test_report_to_json_roundtrips():
+    import json
+    rep = Contract(name="t", all_gathers=(None, 4)).check(hlo=BLAME_SAMPLE)
+    d = json.loads(json.dumps(rep.to_json()))
+    assert d["program"] == "t" and d["ok"]
+    assert d["measured"]["all_gathers"] == 2
+    assert any(b["source"] == "async_round.py:191" for b in d["blame"])
+
+
+# ---------------------------------------------------------------------------
+# lint: host-sync-in-program rule
+# ---------------------------------------------------------------------------
+
+HOST_SYNC_FIXTURE = Path(__file__).resolve().parent / "fixtures" / \
+    "lint_bad_host_sync.py"
+
+
+def test_lint_flags_host_sync_fixture():
+    findings = lint.lint_paths([str(HOST_SYNC_FIXTURE)])
+    assert [f.rule for f in findings] == ["host-sync-in-program"] * 3
+    lines = sorted(f.line for f in findings)
+    assert len(set(lines)) == 3            # float(), .item(), np.asarray
+    assert all("_round" in f.message for f in findings)
+
+
+def test_lint_host_sync_scope_rules():
+    # un-jitted helpers may convert freely; methods sharing a jitted
+    # closure's NAME must not be flagged (the PR 8 scope-resolution fix)
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def make(fn):\n"
+        "    def _merge(x):\n"
+        "        return x * 2\n"
+        "    return jax.jit(_merge)\n"
+        "class Engine:\n"
+        "    def _merge(self, x):\n"
+        "        return float(np.asarray(x).sum())\n")
+    assert lint.lint_source(src, "a.py") == []
+    bad = src.replace("return x * 2", "return float(x.sum())")
+    assert [f.rule for f in lint.lint_source(bad, "a.py")] \
+        == ["host-sync-in-program"]
+    suppressed = src.replace(
+        "return x * 2", "return float(x.sum())  # noqa: host-sync-in-program")
+    assert lint.lint_source(suppressed, "a.py") == []
+
+
+# ---------------------------------------------------------------------------
+# sharding: the collectives shim is gone
+# ---------------------------------------------------------------------------
+
+def test_sharding_collectives_shim_removed():
+    """PR 8 deleted the ``repro.sharding.collectives`` back-compat shim;
+    the one copy of the HLO parsing rules is ``repro.analysis.hlo``."""
+    with pytest.raises(ImportError):
+        import repro.sharding.collectives  # noqa: F401
