@@ -118,7 +118,7 @@ def _async_contract_reports(cfg, fl, params, specs, data_fn, rows):
     from repro.sharding import cohort as csh
 
     mesh = make_data_mesh()
-    index = flat.get_index(params, pad_to=csh.model_shards(mesh))
+    index = flat.get_index(params, pad_to=csh.pad_unit(mesh))
     row_specs = (specs * rows)[:rows]
     _, batches = data_fn(0)
     bpad = jax.tree.map(
@@ -139,8 +139,8 @@ def _async_contract_reports(cfg, fl, params, specs, data_fn, rows):
     fn_a = async_round.make_admit_program(cfg, fl_k, index,
                                           any_malicious=False, mesh=mesh,
                                           rows=rows)
-    txt_a = fn_a.lower(g_rep, c, masks, gates, cms_in, mal, bpad, keys,
-                       written).compile().as_text()
+    txt_a = fn_a.lower(g_rep, c, masks, gates, gmaps, cms_in, mal, bpad,
+                       keys, written).compile().as_text()
     admit = async_round.admit_contract(index, mesh, rows=rows) \
         .check(hlo=txt_a)
     w = jnp.arange(rows, dtype=jnp.float32)

@@ -12,7 +12,13 @@ stable, gated signals are structural, measured on the traced program:
   * sorts — the fused path contains zero sort/top_k ops;
   * collectives — on a multi-device backend the kernelized ``_cohort_norms``
     still lowers with ZERO all-gathers under the data mesh (PR 3's
-    invariant; XLA's top_k partitioning is what used to re-gather).
+    invariant; XLA's top_k partitioning is what used to re-gather);
+  * the two-stage path (ISSUE 9) — rows past the single-pass VMEM budget
+    dispatch to the multilevel kernel (still 1 row read / 0 sorts, never
+    the jnp oracle), and under a 2x2 (data, model) mesh the distributed
+    norms pass lowers with 0 all-gathers / reduce-scatters / all-to-alls
+    and every all-reduce bounded by the histogram-plane payload
+    (2·rows·paths·segs·bins elements — never O(N)).
 
 Emits ``BENCH_quantile.json`` — the quantile-path trajectory anchor.
 
@@ -58,7 +64,24 @@ def _structural(m, R, L, trim=0.95):
     return out
 
 
-def _cohort_setup(model, m):
+def _structural_multilevel(R=2, L=(1 << 18) + 512, trim=0.95):
+    """Trace the long-row dispatch: rows past ``_SINGLE_PASS_ELEMS`` must
+    take the two-stage multilevel kernel — one row-sized read site, zero
+    sorts, NOT the jnp oracle (which would show a sort)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import jaxpr as jaxpr_mod
+    from repro.kernels.fedfa_quantile import ops as q_ops
+
+    rows = jax.random.normal(jax.random.PRNGKey(2), (R, L), jnp.float32)
+    q = jnp.full((R,), 1.0 - (1.0 - trim) * 0.5, jnp.float32)
+    fn = lambda r, qq: q_ops.row_trimmed_stats(r, qq, use_kernel=True,
+                                               interpret=True)
+    c = jaxpr_mod.trace_counts(fn, rows, q, row_elems=rows.size)
+    return {"rows": R, "row_len": L, "row_reads": c.reads, "sorts": c.sorts}
+
+
+def _cohort_setup(model, m, mesh=None):
     import functools
     import jax
     import jax.numpy as jnp
@@ -66,16 +89,17 @@ def _cohort_setup(model, m):
     from repro.core import flat
     from repro.models import model as model_mod
     from repro.models.masks import ClientArch, full_client, stack_masks
+    from repro.sharding import cohort as csh
 
     cfg = get_arch(model).reduced().replace(n_layers=4, n_sections=2)
     g = model_mod.init_params(cfg, jax.random.PRNGKey(0))
-    index = flat.get_index(g)
+    index = flat.get_index(g, pad_to=csh.pad_unit(mesh))
     pool = [ClientArch(0.25, (1, 1)), ClientArch(0.5, (2, 1)),
             ClientArch(1.0, (1, 2)), full_client(cfg)]
     masks = stack_masks([pool[i % len(pool)].masks(cfg) for i in range(m)])
     dens, fracs = jax.vmap(
         functools.partial(flat._density_and_fraction, cfg, index))(masks)
-    xm = jax.random.normal(jax.random.PRNGKey(1), (m, index.n),
+    xm = jax.random.normal(jax.random.PRNGKey(1), (m, index.n_padded),
                            jnp.float32) * dens
     return index, xm, fracs
 
@@ -108,6 +132,26 @@ def _collectives(index, xm, fracs, mesh):
     return {kind: coll.count(txt, kind)
             for kind in ("all-reduce", "all-gather", "reduce-scatter",
                          "all-to-all")}
+
+
+def _dist_collectives(index, xm, fracs, mesh):
+    """Lower the DISTRIBUTED two-stage norms pass on the 2-D
+    P("data", "model") layout and profile its cross-shard traffic."""
+    import jax
+    from repro.analysis import hlo as coll
+    from repro.core import flat
+    from repro.sharding import cohort as csh
+
+    fn = jax.jit(lambda x, f: flat._cohort_norms(
+        index, x, f, 0.95, True, True, mesh=mesh))
+    x = jax.device_put(xm, csh.cohort_buffer_sharding(mesh))
+    fr = jax.device_put(fracs, csh.cohort_sharding(mesh))
+    txt = fn.lower(x, fr).compile().as_text()
+    counts = {kind: coll.count(txt, kind)
+              for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all")}
+    sizes = coll.sizes(txt, "all-reduce", min_elems=1)
+    return counts, max(sizes, default=0)
 
 
 def main() -> None:
@@ -159,6 +203,51 @@ def main() -> None:
         print("FAIL: sort counts wrong (fused must have none, top_k >= 1)",
               flush=True)
         ok = False
+
+    # two-stage multilevel dispatch: long rows stay read-once / sort-free
+    ml = _structural_multilevel()
+    results["two_stage"] = {"multilevel": ml}
+    print(f"multilevel ({ml['rows']}, {ml['row_len']}):  "
+          f"reads={ml['row_reads']} sorts={ml['sorts']}", flush=True)
+    if ml["row_reads"] != 1 or ml["sorts"] != 0:
+        print("FAIL: long-row dispatch is not the read-once sort-free "
+              "two-stage kernel (oracle fallback?)", flush=True)
+        ok = False
+
+    # distributed two-stage norms on a 2x2 (data, model) mesh: zero
+    # gathers / re-layout collectives, all-reduces bounded by the
+    # histogram planes — the model-replicated (m/D, N) transient is gone
+    if jax.device_count() >= 4:
+        from repro.kernels.fedfa_quantile.multilevel import histogram_elems
+        from repro.launch.mesh import make_mesh_2d
+        from repro.sharding import cohort as csh
+        mesh2 = make_mesh_2d(2, 2)
+        m2 = 4
+        index2, xm2, fracs2 = _cohort_setup(args.model, m2, mesh=mesh2)
+        counts2, max_ar = _dist_collectives(index2, xm2, fracs2, mesh2)
+        hist = histogram_elems(m2 // csh.data_shards(mesh2),
+                               index2.n_segments)
+        rec2 = {"collectives": counts2,
+                "max_all_reduce_elems": max_ar,
+                "histogram_cap_elems": hist,
+                "histogram_allreduce_bytes": max_ar * 4,
+                "row_slice_elems_per_device":
+                    (m2 // csh.data_shards(mesh2))
+                    * (index2.n_padded // csh.model_shards(mesh2))}
+        results["two_stage"]["distributed_2x2"] = rec2
+        print(f"distributed 2x2 m={m2}:  collectives {counts2}  "
+              f"max all-reduce {max_ar} elems (histogram cap {hist})",
+              flush=True)
+        if any(counts2.get(k, 0) for k in ("all-gather", "reduce-scatter",
+                                           "all-to-all")):
+            print("FAIL: re-layout collective(s) in the distributed "
+                  f"two-stage norms pass: {counts2}", flush=True)
+            ok = False
+        if max_ar > hist:
+            print(f"FAIL: all-reduce payload {max_ar} exceeds the "
+                  f"histogram cap {hist} — O(N) traffic is back",
+                  flush=True)
+            ok = False
 
     for m in args.cohorts:
         index, xm, fracs = _cohort_setup(args.model, m)

@@ -69,7 +69,7 @@ def _mesh_inputs(cfg, fl, params, specs, batches, mesh, *,
     from repro.core.server import default_class_masks, stack_runtimes
     from repro.sharding import cohort as csh
 
-    index = flat.get_index(params, pad_to=csh.model_shards(mesh))
+    index = flat.get_index(params, pad_to=csh.pad_unit(mesh))
     runtimes = stack_runtimes(cfg, specs)
     m = len(specs)
     pad = csh.pad_rows(m, mesh)
@@ -145,7 +145,8 @@ def _agg_collectives(cfg, fl, params, specs, batches, mesh):
                           jax.numpy.float32), csh.cohort_sharding(mesh))
     fn = jax.jit(lambda g, x, nd: flat.aggregate_buffers(
         index, g, x, cfg, masks, gates, gmaps, nd, graft=True, scale=True,
-        mesh=mesh), out_shardings=csh.global_sharding(mesh))
+        use_kernel=True, interpret=True, mesh=mesh),
+        out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
     scale = index.n_padded // csh.model_shards(mesh)
     return (hlo.count(txt, "all-gather"), hlo.count(txt, "reduce-scatter"),
@@ -229,7 +230,7 @@ def main() -> None:
             n_ag, n_rs, big_ars = _agg_collectives(
                 cfg, fl, params, specs, batches, mesh)
             from repro.core import flat
-            index = flat.get_index(params, pad_to=ms)
+            index = flat.get_index(params, pad_to=csh.pad_unit(mesh))
             d_sh = csh.data_shards(mesh)
             mp = m + csh.pad_rows(m, mesh)
             ratio = dt_un / max(dt_sh, 1e-9)
@@ -293,14 +294,22 @@ def main() -> None:
                 ok = False
             if ms > 1 and n_dev > 1:
                 half = index.n_padded // ms
-                if n_rs < 1:
-                    print(f"FAIL: no reduce-scatter in the 2-D aggregation "
-                          f"path at m={m} ms={ms}", flush=True)
-                    ok = False
-                if any(e != half for e in big_ars):
-                    print(f"FAIL: all-reduce volume above N/n_model at "
-                          f"m={m} ms={ms}: {big_ars} (N/{ms} = {half})",
+                from repro.kernels.fedfa_quantile.multilevel import \
+                    histogram_elems
+                hist = histogram_elems(max(1, mp // d_sh), index.n_segments)
+                if n_rs != 0:
+                    # ISSUE 9: the N axis splits EARLY — per-shard partial
+                    # sums finish with N/n_model psums over ``data``; a
+                    # reduce-scatter means an N-wide intermediate came back
+                    print(f"FAIL: {n_rs} reduce-scatter(s) in the 2-D "
+                          f"aggregation path at m={m} ms={ms} — the "
+                          f"distributed two-stage path never widens to N",
                           flush=True)
+                    ok = False
+                if any(e != half and e > hist for e in big_ars):
+                    print(f"FAIL: all-reduce volume above N/n_model at "
+                          f"m={m} ms={ms}: {big_ars} (N/{ms} = {half}, "
+                          f"histogram cap = {hist})", flush=True)
                     ok = False
                 if max_gather > index.n_padded:
                     # GSPMD may re-layout TRAINING intermediates over the

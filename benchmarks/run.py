@@ -204,8 +204,9 @@ def _validate_analysis_json(path: str) -> list:
         problems.append("top-level ok flag is false")
     progs = {p.get("program"): p for p in data.get("programs", [])}
     expected = ("round/ms1", "round/ms2", "agg/ms1", "agg/ms2",
-                "async/admit", "async/merge", "quantile/fused",
-                "quantile/topk")
+                "async/admit", "async/merge", "async/merge-ms2",
+                "quantile/fused", "quantile/topk", "quantile/fused-pad",
+                "quantile/topk-pad", "quantile/multilevel", "quantile/dist")
     for name in expected:
         p = progs.get(name)
         if p is None:

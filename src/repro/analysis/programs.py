@@ -64,7 +64,7 @@ def _padded_inputs(cfg, fl, params, specs, batches, mesh, rows=None):
     from repro.core.server import default_class_masks, stack_runtimes
     from repro.sharding import cohort as csh
 
-    index = flat.get_index(params, pad_to=csh.model_shards(mesh))
+    index = flat.get_index(params, pad_to=csh.pad_unit(mesh))
     runtimes = stack_runtimes(cfg, specs)
     m = len(specs)
     pad = (rows - m) if rows is not None else csh.pad_rows(m, mesh)
@@ -125,8 +125,8 @@ def agg_report(mesh, m: int = 3) -> Report:
         use_kernel=True, interpret=True, mesh=mesh),
         out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
-    return agg_ops.accumulate_contract(index.n_padded, mesh,
-                                       rows=mp).check(hlo=txt)
+    return agg_ops.accumulate_contract(index.n_padded, mesh, rows=mp,
+                                       segs=index.n_segments).check(hlo=txt)
 
 
 def admit_report(mesh, capacity: int = 3) -> Report:
@@ -140,17 +140,18 @@ def admit_report(mesh, capacity: int = 3) -> Report:
 
     cfg, fl, params, specs, batches = _fixture(capacity)
     rows = capacity + csh.pad_rows(capacity, mesh)
-    index, _, _, (masks, gates, _, _, cms_in, mal), bpad = _padded_inputs(
+    index, _, _, (masks, gates, gmaps, _, cms_in, mal), bpad = _padded_inputs(
         cfg, fl, params, specs, batches, mesh, rows=rows)
-    g = jax.device_put(flat.flatten(index, params), csh.replicated(mesh))
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
     c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
-                       csh.cohort_sharding(mesh))
+                       csh.cohort_buffer_sharding(mesh))
     keys = jax.random.split(jax.random.PRNGKey(0), rows)
     written = jnp.ones((rows,), dtype=jnp.int32)
     fn = async_round.make_admit_program(cfg, fl, index,
                                         any_malicious=False, mesh=mesh,
                                         rows=rows)
-    txt = fn.lower(g, c, masks, gates, cms_in, mal, bpad, keys,
+    txt = fn.lower(g, c, masks, gates, gmaps, cms_in, mal, bpad, keys,
                    written).compile().as_text()
     return async_round.admit_contract(index, mesh, rows=rows).check(hlo=txt)
 
@@ -171,7 +172,7 @@ def merge_report(mesh, capacity: int = 3) -> Report:
     g = jax.device_put(flat.flatten(index, params),
                        csh.global_sharding(mesh))
     c = jax.device_put(jnp.zeros((rows, index.n_padded), jnp.float32),
-                       csh.cohort_sharding(mesh))
+                       csh.cohort_buffer_sharding(mesh))
     w = jnp.arange(rows, dtype=jnp.float32)
     fn = async_round.make_merge_program(cfg, fl, index, mesh=mesh,
                                         rows=rows)
@@ -181,19 +182,21 @@ def merge_report(mesh, capacity: int = 3) -> Report:
 
 def quantile_reports(m: int = 4, r: int = 8, length: int = 512,
                      trim: float = 0.95) -> List[Report]:
-    """Trace both trimmed-norm paths on one (m, r, length) row block and
-    check the jaxpr contracts: fused = 1 row read / 0 sorts, top_k tail =
-    the pinned 7 reads / 1 sort reference.  Both are also compiled so the
+    """Trace the trimmed-norm paths and check the jaxpr contracts.
+    Three fixtures: the dividing (m, r, length) row block (fused = 1 row
+    read / 0 sorts, top_k tail = the pinned 7 reads / 1 sort reference),
+    a NON-dividing block whose (Rp, Lp) staging pad re-anchors the padded
+    peak budgets (``quantile/fused-pad`` / ``quantile/topk-pad``), and a
+    single-pass-budget-exceeding long row that must dispatch to the
+    two-stage multilevel kernel (``quantile/multilevel`` — still 1 read /
+    0 sorts, NOT the jnp oracle).  All are also compiled so the
     peak-live-bytes budget (a multiple of the row-block size) is checked
     on the scheduled module."""
     import jax
     import jax.numpy as jnp
     from repro.core import flat
+    from repro.kernels.fedfa_quantile import multilevel as q_ml
     from repro.kernels.fedfa_quantile import ops as q_ops
-
-    rows = jax.random.normal(jax.random.PRNGKey(0), (m, r, length),
-                             jnp.float32)
-    q = jnp.full((m,), 1.0 - (1.0 - trim) * 0.5, jnp.float32)
 
     def topk(rows, q):
         ra = jnp.abs(rows)
@@ -204,16 +207,75 @@ def quantile_reports(m: int = 4, r: int = 8, length: int = 512,
         _, sq = flat._rows_trimmed_stats(rows, q, trim, True, True)
         return jnp.sqrt(sq)
 
-    block_bytes = rows.size * rows.dtype.itemsize
     out = []
-    for contract, fn in (
-            (q_ops.fused_quantile_contract(block_bytes), fused),
-            (q_ops.topk_tail_contract(block_bytes), topk)):
-        jaxpr = jax.make_jaxpr(fn)(rows, q)
-        txt = jax.jit(fn).lower(rows, q).compile().as_text()
-        out.append(contract.check(jaxpr=jaxpr, hlo=txt,
-                                  row_elems=rows.size))
+    # (shape, padded): length = 500 leaves Lp = 512 != L and Rp = 24 != 21,
+    # exercising the staged zero-padded dispatch of ops.row_trimmed_stats
+    for shape, padded in (((m, r, length), False), ((3, 7, 500), True)):
+        rows = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+        q = jnp.full((shape[0],), 1.0 - (1.0 - trim) * 0.5, jnp.float32)
+        block_bytes = rows.size * rows.dtype.itemsize
+        for contract, fn in (
+                (q_ops.fused_quantile_contract(block_bytes, padded=padded),
+                 fused),
+                (q_ops.topk_tail_contract(block_bytes, padded=padded),
+                 topk)):
+            jaxpr = jax.make_jaxpr(fn)(rows, q)
+            txt = jax.jit(fn).lower(rows, q).compile().as_text()
+            out.append(contract.check(jaxpr=jaxpr, hlo=txt,
+                                      row_elems=rows.size))
+
+    # rows past the single-pass VMEM budget (_SINGLE_PASS_ELEMS) must take
+    # the two-stage multilevel kernel: one row-sized read site, zero sorts
+    long_rows = jax.random.normal(jax.random.PRNGKey(3),
+                                  (2, (1 << 18) + 512), jnp.float32)
+    ql = jnp.full((2,), 1.0 - (1.0 - trim) * 0.5, jnp.float32)
+
+    def ml(rows, q):
+        t, ss = q_ops.row_trimmed_stats(rows, q, use_kernel=True,
+                                        interpret=True)
+        return t, ss
+
+    jaxpr = jax.make_jaxpr(ml)(long_rows, ql)
+    txt = jax.jit(ml).lower(long_rows, ql).compile().as_text()
+    out.append(q_ml.multilevel_quantile_contract(
+        long_rows.size * long_rows.dtype.itemsize).check(
+            jaxpr=jaxpr, hlo=txt, row_elems=long_rows.size))
     return out
+
+
+def dist_quantile_report(mesh, m: int = 4, trim: float = 0.95) -> Report:
+    """Lower the distributed trimmed-norm pass on the 2-D
+    P("data", "model") cohort layout (the tentpole of ISSUE 9) and check
+    ``distributed_quantile_contract``: each device reads only its local
+    (m/D, N/n_model) slice (1 row read, 0 sorts), there are ZERO gathers
+    or re-layout collectives, and every all-reduce is bounded by the
+    histogram-plane payload — never O(N)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.kernels.fedfa_quantile import multilevel as q_ml
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(m)
+    index, _, mp, _, _ = _padded_inputs(cfg, fl, params, specs, batches,
+                                        mesh)
+    xm = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(1), (mp, index.n_padded),
+                          jnp.float32), csh.cohort_buffer_sharding(mesh))
+    fracs = jax.device_put(
+        jnp.full((mp, len(index.leaves)), 0.75, jnp.float32),
+        csh.cohort_sharding(mesh))
+
+    def norms(xm, fracs):
+        return flat._cohort_norms(index, xm, fracs, trim, True, True, mesh)
+
+    jaxpr = jax.make_jaxpr(norms)(xm, fracs)
+    txt = jax.jit(norms).lower(xm, fracs).compile().as_text()
+    local_rows = mp // csh.data_shards(mesh)
+    slice_elems = local_rows * (index.n_padded // csh.model_shards(mesh))
+    return q_ml.distributed_quantile_contract(
+        local_rows, index.n_segments, slice_elems * 4).check(
+            jaxpr=jaxpr, hlo=txt, row_elems=slice_elems)
 
 
 def canonical_reports(progress: Callable[[str], None] = lambda s: None
@@ -238,7 +300,10 @@ def canonical_reports(progress: Callable[[str], None] = lambda s: None
             ("aggregation (2x2 mesh)", lambda: agg_report(mesh_2d)),
             ("async admit (data mesh)", lambda: admit_report(mesh_1d)),
             ("async merge (data mesh)", lambda: merge_report(mesh_1d)),
-            ("quantile jaxpr", quantile_reports)):
+            ("async merge (2x2 mesh)", lambda: merge_report(mesh_2d)),
+            ("quantile jaxpr", quantile_reports),
+            ("distributed quantile (2x2 mesh)",
+             lambda: dist_quantile_report(mesh_2d))):
         progress(f"lowering {label} ...")
         got = build()
         reports.extend(got if isinstance(got, list) else [got])

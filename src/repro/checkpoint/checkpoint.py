@@ -49,15 +49,16 @@ def restore_to_buffer(path: str, like: Any,
     """Restore a checkpoint straight onto the resident flat representation:
     returns (FlatIndex, (N,) f32 buffer, meta) ready for ``run_rounds``.
 
-    With ``mesh`` set, the index pads N for the mesh's model shards and the
-    buffer is ``device_put`` onto the sharded P("model") global layout, so
-    the first resident round starts from N/n_model slices per device with
-    no reshard copy (matching what ``run_rounds`` builds itself).
+    With ``mesh`` set, the index pads N with ``sharding.cohort.pad_unit``
+    (model shards x quantile column tile — the same width ``run_rounds``
+    builds itself) and the buffer is ``device_put`` onto the sharded
+    P("model") global layout, so the first resident round starts from
+    N/n_model slices per device with no reshard copy.
     """
     from repro.core import flat
     from repro.sharding import cohort as cohort_sh
     tree, meta = restore(path, like)
-    index = flat.get_index(tree, pad_to=cohort_sh.model_shards(mesh))
+    index = flat.get_index(tree, pad_to=cohort_sh.pad_unit(mesh))
     buf = flat.flatten(index, tree)
     if mesh is not None:
         buf = jax.device_put(buf, cohort_sh.global_sharding(mesh))

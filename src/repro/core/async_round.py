@@ -44,13 +44,22 @@ deterministic event loop over (dispatch, arrival, deadline) events, so a
 (seed, trace) pair replays bit-for-bit and the benchmark can gate
 throughput ratios on simulated time.
 
-Sharding: the slot pool lives in the whole-row P("data")
-``cohort_sharding`` layout between programs (NOT the resident 2-D layout
-— see ``sharding.cohort.async_admit_shardings`` for why), so the merge's
-aggregation tail lowers exactly like the resident round: zero all-gathers.
+Sharding: the slot pool lives in the resident 2-D P("data", "model")
+``cohort_buffer_sharding`` layout END-TO-END between programs — each
+device holds only its (rows/D, N/n_model) slice, the PR 6 follow-up (a)
+the earlier whole-row layout deferred.  Two things make that possible:
+the distributed two-stage trimmed quantile
+(``kernels.fedfa_quantile.multilevel``) lets the merge's norms pass
+consume N/n_model slices directly (histogram psums over ``model``, never
+whole rows), and **grafting moved to admission time** — the trained rows
+are naturally model-replicated whole rows inside the admit program, so
+the data-dependent graft gather is shard-local there, and the merge runs
+``flat.aggregate_buffers(pregrafted=True)``: 2-D, zero all-gathers, zero
+re-layout collectives (see ``sharding.cohort.async_admit_shardings``).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
@@ -139,10 +148,14 @@ def admit_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
     in slot order and the program writes rows with an elementwise
     ``where(written, ...)`` select — shard-local by construction, so the
     bound drops to exactly 0 and the pool never materializes anywhere
-    (``full_cohort_gathers == 0`` over >= rows*N payloads).  Peak budget
-    ``(2 + 5*r) * N * 4`` bytes/device (r = pool rows per data shard):
-    the pool shard, the replicated global and the per-row training
-    temporaries — measured ~5 N-multiples on the canonical fixture."""
+    (``full_cohort_gathers == 0`` over >= rows*N payloads).  The graft
+    gather now runs here too (admission-time grafting, see the module
+    docstring): it permutes rows of each client's own model-replicated
+    trained buffer, shard-local along ``data``, so the bound stays 0.
+    Peak budget ``(2 + 5*r) * N * 4`` bytes/device (r = pool rows per
+    data shard): the grafted rows, the replicated global and the per-row
+    training temporaries — measured ~5 N-multiples on the canonical
+    fixture; the resident pool slice itself is only N/n_model wide."""
     from repro.analysis.contracts import Contract
     r = max(1, rows // cohort_sh.data_shards(mesh))
     return Contract(
@@ -156,20 +169,30 @@ def admit_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
 
 def merge_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
     """Declared contract of the merge program: the bounded-staleness merge
-    aggregates the whole-row P("data") pool with ZERO all-gathers (the
-    invariant the slot-pool layout decision preserves — same aggregation
-    tail as the resident round) and >= 1 N-sized (M', γ) psum on a
-    multi-device mesh; the donated g_buf (param 0) must alias.  Peak
-    budget ``(6 + 12*r) * N * 4`` bytes/device like the aggregation
-    contract (same tail; measured ~11 N-multiples on the fixture)."""
+    aggregates the 2-D P("data", "model") pool with ZERO all-gathers AND
+    zero re-layout collectives — rows were grafted at admission, so the
+    aggregation is 2-D end-to-end: no reduce-scatter, per-shard partial
+    sums finished by N/n_model-sized psums plus the distributed quantile's
+    histogram-plane psums over ``model`` (the all-reduce cap below).  The
+    donated g_buf (param 0) must alias.  Peak budget ``(6 + 12*r) * N * 4``
+    bytes/device like the aggregation contract (same tail; an upper bound —
+    the 2-D path peaks well below it since rows stay N/n_model slices)."""
     from repro.analysis.contracts import Contract
+    from repro.kernels.fedfa_quantile.multilevel import histogram_elems
     multi = mesh is not None and mesh.size > 1
+    ms = cohort_sh.model_shards(mesh)
     r = max(1, rows // cohort_sh.data_shards(mesh))
     kw = {}
-    if multi and cohort_sh.model_shards(mesh) == 1:
+    if multi and ms == 1:
         kw = dict(scale_allreduces=(1, None), scale_elems=index.n_padded)
+    elif multi:
+        scale = index.n_padded // ms
+        kw = dict(reduce_scatters=0, scale_allreduces=(1, 2),
+                  scale_elems=scale,
+                  allreduce_max_elems=max(
+                      scale, histogram_elems(r, index.n_segments)))
     return Contract(
-        name="async/merge",
+        name="async/merge" if ms <= 1 else f"async/merge-ms{ms}",
         description="merge: staleness-weighted aggregation over the pool",
         all_gathers=0,
         peak_live_bytes_per_device=(None, (6 + 12 * r) * index.n_padded * 4),
@@ -180,20 +203,26 @@ def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                        *, any_malicious: bool, mesh=None, rows: int):
     """Build (or fetch) the jitted admit program for one pool shape:
 
-      (g_buf (N,), c_buf (rows, N), masks, gates, cms, mal, batches,
-       keys, written (rows,) int32) -> (c_buf' (rows, N), losses (rows,))
+      (g_buf (N,), c_buf (rows, N), masks, gates, gmaps, cms, mal,
+       batches, keys, written (rows,) int32)
+        -> (c_buf' (rows, N), losses (rows,))
 
     All stacked arguments arrive in SLOT ORDER (the engine places each
     dispatched client at its pool-slot row, pad spec elsewhere); the
-    program trains every row against the CURRENT global and keeps the
-    trained row where ``written`` is set, the existing pool row where it
-    is not.  The select is elementwise along the sharded row axis, so it
-    lowers with zero collectives — the re-gather the old runtime-index
-    scatter forced is structurally impossible.  Rows are position-
-    independent under vmap, so each client's update is bit-identical to
-    the dispatch-ordered layout.  c_buf is donated (admissions ping-pong
-    one allocation); g_buf is NOT (the merge donates it).  Cached in
-    ``round._ROUND_CACHE`` alongside the resident programs.
+    program trains every row against the CURRENT global, **grafts** it
+    (Alg. 2, when the strategy grafts — the trained rows are still
+    model-replicated whole rows here, so the data-dependent gather is
+    shard-local; the merge then runs ``pregrafted=True`` and never needs
+    whole rows) and keeps the grafted row where ``written`` is set, the
+    existing pool row where it is not.  The select is elementwise along
+    the sharded row axis, so it lowers with zero collectives — the
+    re-gather the old runtime-index scatter forced is structurally
+    impossible.  Rows are position-independent under vmap, so each
+    client's update is bit-identical to the dispatch-ordered layout.
+    c_buf is donated (admissions ping-pong one allocation) and lives in
+    the 2-D P("data", "model") resident layout on both sides; g_buf is
+    NOT donated (the merge donates it).  Cached in ``round._ROUND_CACHE``
+    alongside the resident programs.
     """
     key = ("admit", index, cfg, round_mod._fl_static(fl),
            bool(any_malicious), round_mod._mesh_key(mesh), rows)
@@ -201,16 +230,22 @@ def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
     if fn is not None:
         round_mod._ROUND_CACHE.move_to_end(key)
         return fn
+    do_graft = bool(STRATEGIES[fl.strategy].get("graft", False))
 
-    def _admit(g_buf, c_buf, masks, gates, cms, mal, batches, keys, written):
+    def _admit(g_buf, c_buf, masks, gates, gmaps, cms, mal, batches, keys,
+               written):
         g = flat.unflatten(index, g_buf)
         updated, losses = cohort_update(
             g, cfg, fl, masks, gates, batches, cms, mal, keys,
             any_malicious=any_malicious)
         x = cohort_sh.constrain_cohort(
             flat.flatten_stacked(index, updated), mesh)
+        if do_graft:
+            x = cohort_sh.constrain_cohort(
+                jax.vmap(functools.partial(flat._graft_flat, index))(
+                    x, gmaps), mesh)
         c_new = jnp.where((written != 0)[:, None], x, c_buf)
-        return cohort_sh.constrain_cohort(c_new, mesh), losses
+        return cohort_sh.constrain_cohort_buffer(c_new, mesh), losses
 
     jit_kw = {}
     if mesh is not None:
@@ -232,9 +267,13 @@ def make_merge_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
 
     ``flat.aggregate_buffers`` over the whole pool with the per-row
     staleness-discounted weights ``w`` as the ``nd`` argument — free /
-    unarrived / over-stale rows carry w = 0 and are inert in grafting, the
-    trimmed norms and α, exactly like mesh pad rows.  g_buf is donated;
-    the pool buffer is read-only so in-flight rows survive the merge.
+    unarrived / over-stale rows carry w = 0 and are inert in the trimmed
+    norms and α, exactly like mesh pad rows.  Rows were already grafted by
+    the admit program, so the merge declares ``pregrafted=True``: graft-on
+    weighting semantics without the gather, and the pool's 2-D
+    P("data", "model") layout is consumed directly (no re-layout).  g_buf
+    is donated; the pool buffer is read-only so in-flight rows survive the
+    merge.
     """
     key = ("merge", index, cfg, round_mod._fl_static(fl),
            round_mod._mesh_key(mesh), rows)
@@ -245,11 +284,11 @@ def make_merge_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
     kw = STRATEGIES[fl.strategy]
 
     def _merge(g_buf, c_buf, masks, gates, gmaps, w):
-        x = cohort_sh.constrain_cohort(c_buf, mesh)
+        x = cohort_sh.constrain_cohort_buffer(c_buf, mesh)
         return flat.aggregate_buffers(
             index, g_buf, x, cfg, masks, gates, gmaps, w, trim=fl.trim,
-            use_kernel=fl.use_kernel, interpret=fl.interpret, mesh=mesh,
-            **kw)
+            pregrafted=True, use_kernel=fl.use_kernel,
+            interpret=fl.interpret, mesh=mesh, **kw)
 
     jit_kw = {}
     if mesh is not None:
@@ -403,8 +442,8 @@ class AsyncEngine:
         if c is None or c.is_deleted() or c.shape[0] != self.rows:
             c = jnp.zeros((self.rows, self.index.n_padded), jnp.float32)
             if self.mesh is not None:
-                c = jax.device_put(c,
-                                   cohort_sh.cohort_sharding(self.mesh))
+                c = jax.device_put(
+                    c, cohort_sh.cohort_buffer_sharding(self.mesh))
             self._c_buf = c
 
     def _materialize(self) -> None:
@@ -428,7 +467,7 @@ class AsyncEngine:
         slot_specs = [self._pad_spec] * self.rows
         for i, j in enumerate(slots):
             slot_specs[int(j)] = specs[i]
-        masks, gates, _gmaps, _nd, cms, mal = \
+        masks, gates, gmaps, _nd, cms, mal = \
             stack_runtimes(self.cfg, slot_specs)
         cms_in = default_class_masks(cms, self.cfg, self.fl, self.rows)
         # host-side per-client keys: client i keeps split(gkey)[i] wherever
@@ -448,7 +487,7 @@ class AsyncEngine:
             mesh=self.mesh, rows=self.rows)
         self._ensure_cbuf()
         self._c_buf, losses = fn(self.g_buf, self._c_buf, masks, gates,
-                                 cms_in, mal, batches_row, keys,
+                                 gmaps, cms_in, mal, batches_row, keys,
                                  jnp.asarray(written))
         self.pool.loss[slots] = np.asarray(losses)[slots]
 
@@ -486,9 +525,13 @@ class AsyncEngine:
                         jnp.asarray(w))
         loss = float(np.nanmean(pool.loss[keep]))
         if self.on_merge:
+            # pool rows were grafted at admission (when the strategy
+            # grafts) — re-aggregating the snapshot must NOT graft again
             self.on_merge({"x": np.asarray(self._c_buf), "w": w.copy(),
                            "specs": slot_specs, "g_before": g_prev,
-                           "g_after": np.asarray(self.g_buf), "loss": loss})
+                           "g_after": np.asarray(self.g_buf), "loss": loss,
+                           "pregrafted": bool(
+                               STRATEGIES[self.fl.strategy].get("graft"))})
         self.merged_rows += int(keep.sum())
         self.dropped_rows += int(overstale.sum())
         pool.release(ready)                      # over-stale rows too
@@ -519,10 +562,12 @@ class AsyncEngine:
             w[np.asarray(slots)] = [float(s.n_data) for s in specs]
             slot_specs = list(specs) + \
                 [self._pad_spec] * (self.rows - len(specs))
+            # the resident round grafts inside its own aggregation — the
+            # scratch rows it returns are UNgrafted
             self.on_merge({"x": np.asarray(self._c_buf), "w": w,
                            "specs": slot_specs, "g_before": g_prev,
                            "g_after": np.asarray(self.g_buf),
-                           "loss": lossf})
+                           "loss": lossf, "pregrafted": False})
         self.merged_rows += len(specs)
         pool.release(pool.occupied.copy())
         self.version += 1
@@ -550,8 +595,7 @@ def run_async(global_params: Params, cfg: ArchConfig, fl: FLConfig,
     if merges <= 0:
         return global_params, []
     acfg = acfg or AsyncConfig()
-    index = flat.get_index(global_params,
-                           pad_to=cohort_sh.model_shards(mesh))
+    index = flat.get_index(global_params, pad_to=cohort_sh.pad_unit(mesh))
     g_buf = flat.flatten(index, global_params)
     if mesh is not None:
         g_buf = jax.device_put(g_buf, cohort_sh.global_sharding(mesh))

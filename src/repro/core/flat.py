@@ -42,6 +42,7 @@ from repro.core.fedfa import _path_stage_info
 from repro.core.masking import (AX, active_fraction, axis_mask_tree,
                                 mask_density)
 from repro.kernels.fedfa_agg import ops as agg_ops
+from repro.kernels.fedfa_quantile import multilevel as quant_ml
 from repro.kernels.fedfa_quantile import ops as quant_ops
 from repro.models.masks import WidthMasks
 
@@ -126,6 +127,29 @@ class FlatIndex:
         self.g_base = np.concatenate(g_base).astype(np.int32)
         self.g_row = np.concatenate(g_row)
         self.g_rest = np.concatenate(g_rest)
+
+
+def _segment_maps(index: FlatIndex):
+    """Static per-position segment map for the two-stage distributed
+    quantile: (seg_id, seg_len, leaf_of_seg) numpy arrays, memoized on the
+    index.  ``seg_id`` (n_padded,) is ``row_of`` with the inert pad tail
+    remapped to -1 (``row_of`` stores 0 there so weight gathers stay
+    in-bounds, but the quantile kernel must EXCLUDE pads, not bin them into
+    segment 0); ``seg_len`` (S,) is the global element count per segment and
+    ``leaf_of_seg`` (S,) maps each segment to its leaf (for per-leaf active
+    fractions)."""
+    maps = getattr(index, "_segment_maps", None)
+    if maps is None:
+        seg_id = index.row_of.astype(np.int32).copy()
+        seg_id[index.n:] = -1
+        seg_len = np.zeros(index.n_segments, np.int32)
+        leaf_of = np.zeros(index.n_segments, np.int32)
+        for li, spec in enumerate(index.leaves):
+            seg_len[spec.seg0:spec.seg0 + spec.lead] = spec.rest
+            leaf_of[spec.seg0:spec.seg0 + spec.lead] = li
+        maps = (seg_id, seg_len, leaf_of)
+        index._segment_maps = maps
+    return maps
 
 
 _INDEX_CACHE: "OrderedDict[Any, FlatIndex]" = OrderedDict()
@@ -287,6 +311,15 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
     sharding propagation, XLA's top_k partitioning instead all-gathers the
     client axis leaf by leaf, which re-materializes the cohort buffer on
     every device.
+
+    With real model shards (and the kernel path selected) the pass is 2-D:
+    each device runs the segmented two-stage quantile on its
+    (m/D, N/n_model) slice of the P("data", "model") buffer and the only
+    cross-shard traffic is the psum of per-level histogram planes over
+    ``model`` (``kernels.fedfa_quantile.multilevel``) — the model-replicated
+    (m/D, N) transient is gone.  Requires the index padded with
+    ``sharding.cohort.pad_unit`` so the local slice tiles the kernel evenly;
+    otherwise the pass falls back to the model-replicated layout.
     """
 
     def norms_local(xm_l, fracs_l):
@@ -302,11 +335,31 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
             cols.append(jnp.sqrt(sq))
         return jnp.concatenate(cols, axis=1)
 
-    from repro.sharding.cohort import shardable
-    if not shardable(mesh, xm.shape[0]):
+    from repro.sharding import cohort as csh
+    if not csh.shardable(mesh, xm.shape[0]):
         return norms_local(xm, fracs)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+    ms = csh.model_shards(mesh)
+    if (ms > 1 and (use_kernel or interpret)
+            and xm.shape[1] % (ms * quant_ml.TILE) == 0):
+        seg_id, seg_len, leaf_of = _segment_maps(index)
+
+        def norms_2d(xm_l, fracs_l, seg_l):
+            q_seg = 1.0 - (1.0 - trim) * fracs_l[:, jnp.asarray(leaf_of)]
+            _, sq = quant_ml.segmented_trimmed_stats(
+                xm_l, seg_l[0], jnp.asarray(seg_len), q_seg,
+                axis_name=csh.MODEL_AXIS,
+                interpret=interpret or jax.default_backend() != "tpu")
+            return jnp.sqrt(sq)
+
+        # seg_id enters as a host constant (constvar, not a broadcast eqn)
+        # so the traced program's only row-sized read is the kernel itself
+        return shard_map(
+            norms_2d, mesh=mesh,
+            in_specs=(P("data", "model"), P("data", None), P(None, "model")),
+            out_specs=P("data", None), check_rep=False)(
+                xm, fracs, np.asarray(seg_id)[None, :])
     return shard_map(norms_local, mesh=mesh,
                      in_specs=(P("data", None), P("data", None)),
                      out_specs=P("data", None), check_rep=False)(xm, fracs)
@@ -315,7 +368,8 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
 def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
                       cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
                       gmaps: jax.Array, n_data: jax.Array, *,
-                      graft: bool = True, scale: bool = True,
+                      graft: bool = True, pregrafted: bool = False,
+                      scale: bool = True,
                       trim: float = 0.95, eps: float = 1e-12,
                       use_kernel: Optional[bool] = None,
                       interpret: bool = False, mesh=None) -> jax.Array:
@@ -325,30 +379,64 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
     across rounds.  ``aggregate_flat`` below is the tree-in/tree-out wrapper.
 
     With ``mesh`` set, the client axis m is laid out over the mesh ``data``
-    axis (``repro.sharding.cohort``): the per-client elementwise passes and
-    the trimmed-norm pass — which needs whole (client, segment) rows — are
-    pinned to that model-replicated sharding, and the N axis splits only in
-    the two fused (M', γ) reductions (``agg_ops.accumulate``): per-shard
-    partial sums, a reduce-scatter over ``model`` and one N/n_model-sized
-    psum over ``data``, so M', Γ, and the merged global below live as
-    N/n_model slices per device — zero all-gathers in the lowering, with
-    ``g_flat`` consumed shard-locally by the γ = 0 merge.  Cohorts padded
+    axis (``repro.sharding.cohort``).  With real model shards and the
+    kernel path, the N axis splits EARLY: densities, the distributed
+    two-stage trimmed-norm pass (histogram psums over ``model``, see
+    ``_cohort_norms``) and both fused (M', γ) reductions consume
+    P("data", "model") slices directly — per-shard partial sums finished
+    by one N/n_model psum over ``data``, no reduce-scatter, so M', Γ, and
+    the merged global below live as N/n_model slices per device — zero
+    all-gathers in the lowering, with ``g_flat`` consumed shard-locally by
+    the γ = 0 merge.  Only the graft gather (a data-dependent cross-shard
+    row permutation) still opens a transient model-replicated window;
+    ``pregrafted=True`` declares the rows were grafted upstream (the async
+    admit does this), keeping graft-on weighting semantics while skipping
+    the gather — the program is then 2-D end-to-end.  Cohorts padded
     with ``n_data = 0`` rows aggregate identically to the unpadded cohort:
     zero weight in both sums, and excluded from the α mean below.  The
     parameter axis's inert zero tail (``index.n_padded``, see ``FlatIndex``)
     is likewise invisible: density 0 in both sums and outside every norm
     segment.
     """
-    from repro.sharding.cohort import constrain_cohort
+    from repro.sharding import cohort as csh
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
+    ms = csh.model_shards(mesh)
+    two_d = (ms > 1 and csh.shardable(mesh, x.shape[0])
+             and (use_kernel or interpret)
+             and index.n_padded % (ms * quant_ml.TILE) == 0)
+    constrain = ((lambda a: csh.constrain_cohort_buffer(a, mesh)) if two_d
+                 else (lambda a: csh.constrain_cohort(a, mesh)))
 
-    dens, fracs = jax.vmap(
-        functools.partial(_density_and_fraction, cfg, index))(masks)
-    dens = constrain_cohort(dens, mesh)
-    x_g = jax.vmap(functools.partial(_graft_flat, index))(
-        constrain_cohort(x, mesh), gmaps) if graft else x
-    x_g = constrain_cohort(x_g, mesh)
+    dens_fn = jax.vmap(functools.partial(_density_and_fraction, cfg, index))
+    if two_d:
+        # build each device's (m/D, N/n_model) density slice SHARD-LOCALLY:
+        # left to propagation, GSPMD reshards the per-leaf concatenate onto
+        # the model axis with a zero-pad + row-width all-reduce — exactly
+        # the model-replicated (m/D, N) transient this path retires
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def _dens_local(mk):
+            d, f = dens_fn(mk)
+            cols = index.n_padded // ms
+            k = jax.lax.axis_index(csh.MODEL_AXIS)
+            return jax.lax.dynamic_slice_in_dim(d, k * cols, cols, axis=1), f
+
+        dens, fracs = shard_map(
+            _dens_local, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(csh.DATA_AXIS), masks),),
+            out_specs=(P(csh.DATA_AXIS, csh.MODEL_AXIS),
+                       P(csh.DATA_AXIS, None)),
+            check_rep=False)(masks)
+    else:
+        dens, fracs = dens_fn(masks)
+        dens = constrain(dens)
+    x_g = x
+    if graft and not pregrafted:
+        x_g = jax.vmap(functools.partial(_graft_flat, index))(
+            csh.constrain_cohort(x, mesh), gmaps)
+    x_g = constrain(x_g)
 
     if graft:
         dwrow = None   # grafting weights every depth slot equally (1.0)
@@ -376,15 +464,15 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
         warow = dwrow
     else:
         warow = alpha if dwrow is None else dwrow * alpha
-    contrib = constrain_cohort(
-        x_g * dens if warow is None else x_g * dens * gather(warow), mesh)
-    counts = constrain_cohort(
-        dens if dwrow is None else dens * gather(dwrow), mesh)
+    contrib = constrain(
+        x_g * dens if warow is None else x_g * dens * gather(warow))
+    counts = constrain(
+        dens if dwrow is None else dens * gather(dwrow))
     ones_n = jnp.ones((index.n_padded,), jnp.float32)
     Mp = agg_ops.accumulate(contrib, n_data, ones_n, use_kernel=use_kernel,
-                            interpret=interpret, mesh=mesh)
+                            interpret=interpret, mesh=mesh, cohort_2d=two_d)
     Gm = agg_ops.accumulate(counts, n_data, ones_n, use_kernel=use_kernel,
-                            interpret=interpret, mesh=mesh)
+                            interpret=interpret, mesh=mesh, cohort_2d=two_d)
 
     upd = Mp / jnp.maximum(Gm, eps)
     return jnp.where(Gm > 0, upd, g_flat)  # γ = 0 keeps the global value

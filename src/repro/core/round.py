@@ -32,16 +32,21 @@ built by ``repro.launch.mesh.get_mesh``), the round is 2-D SPMD over the
     shards by ``flat.FlatIndex``, with an inert zero tail).
 
 Inside the round the global model is (unavoidably) gathered once into
-local training, and the freshly trained cohort is consumed by the
-aggregation in the pre-split P("data") layout — the trimmed-norm pass
-needs whole (client, segment) rows.  The N axis splits in the (M', γ)
-reductions via reduce-scatter + an N/n_model-sized psum
-(``kernels.fedfa_agg.ops.accumulate``), the γ = 0 merge runs on the
-slices, and the returned cohort buffer is constrained back to the 2-D
-layout by a communication-free local slice.  The aggregation path lowers
-with zero all-gathers; ``flat.unflatten`` re-gathers the global buffer
-only at eval/checkpoint boundaries.  The donated ping-pong of the two
-buffers is unchanged (matching in/out shardings keep XLA aliasing them).
+local training; the graft gather consumes the freshly trained cohort in
+the pre-split P("data") layout (a data-dependent cross-shard row
+permutation needs whole rows), and from there the N axis splits EARLY:
+the distributed two-stage trimmed quantile
+(``kernels.fedfa_quantile.multilevel``) runs the norms pass on
+P("data", "model") slices — per-level histogram psums over ``model``,
+never whole rows — and both (M', γ) reductions are per-shard partial
+sums finished by an N/n_model-sized psum over ``data`` (no
+reduce-scatter; ``kernels.fedfa_agg.ops.accumulate``).  The γ = 0 merge
+runs on the slices, and the returned cohort buffer is constrained back
+to the 2-D layout by a communication-free local slice.  The aggregation
+path lowers with zero all-gathers; ``flat.unflatten`` re-gathers the
+global buffer only at eval/checkpoint boundaries.  The donated
+ping-pong of the two buffers is unchanged (matching in/out shardings
+keep XLA aliasing them).
 
 Slot-pool / donation contract (shared with ``repro.core.async_round``):
 the (m, N) cohort scratch is a **slot pool** — m fixed rows whose content
@@ -151,7 +156,11 @@ def round_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
     measured inventory on the canonical 2x2 fixture is 38 all-gathers /
     24 all-to-alls / 12 collective-permutes, ceilinged at ~1.7x, and no
     single all-gather may exceed one full (N,) model row — a
-    cohort-sized gather stays structurally impossible.
+    cohort-sized gather stays structurally impossible.  Since the
+    distributed two-stage quantile landed, the aggregation tail has NO
+    reduce-scatter either (the N axis pre-splits before the reductions);
+    a small allowance remains for the re-layout ops GSPMD may still emit
+    on the training side.
     """
     from repro.analysis.contracts import Contract
     multi = mesh is not None and mesh.size > 1
@@ -163,7 +172,7 @@ def round_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
                   scale_elems=index.n_padded)
     elif multi:
         kw = dict(all_gathers=(None, 64), all_to_alls=(None, 48),
-                  collective_permutes=(None, 24), reduce_scatters=(2, 8),
+                  collective_permutes=(None, 24), reduce_scatters=(0, 8),
                   max_all_gather_elems=index.n_padded)
     return Contract(
         name=f"round/ms{ms}",
@@ -213,9 +222,11 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
         updated, losses = cohort_update(
             g, cfg, fl, masks, gates, batches, cms, mal, keys,
             any_malicious=any_malicious)
-        # the aggregation consumes x in the pre-split P("data") layout (the
-        # norm pass needs whole rows); the RETURNED cohort buffer is then
-        # sliced down to the resident 2-D P("data", "model") layout for free
+        # the graft gather consumes x in the pre-split P("data") layout
+        # (data-dependent row permutation needs whole rows); the norms and
+        # reductions split N immediately after, and the RETURNED cohort
+        # buffer is sliced down to the resident 2-D P("data", "model")
+        # layout for free
         x = cohort_sh.constrain_cohort(
             flat.flatten_stacked(index, updated), mesh)             # (m, N)
         g_new = flat.aggregate_buffers(
@@ -339,8 +350,7 @@ def run_rounds(global_params: Params, cfg: ArchConfig, fl: FLConfig,
     """
     if rounds <= 0:
         return global_params, []
-    index = flat.get_index(global_params,
-                           pad_to=cohort_sh.model_shards(mesh))
+    index = flat.get_index(global_params, pad_to=cohort_sh.pad_unit(mesh))
     driver = ResidentDriver(cfg, fl, index, mesh=mesh)
     g_buf = flat.flatten(index, global_params)
     if mesh is not None:

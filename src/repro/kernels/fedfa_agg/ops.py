@@ -53,7 +53,7 @@ def _accum_local(x: jax.Array, weights: jax.Array, mask: jax.Array,
     return out[:n]
 
 
-def accumulate_contract(n_padded: int, mesh=None, rows=None):
+def accumulate_contract(n_padded: int, mesh=None, rows=None, segs=None):
     """Declared contract of the aggregation path built on ``accumulate``
     (``flat.aggregate_buffers`` lowered standalone on the round's own
     shardings — see ``repro.analysis.contracts``).
@@ -61,10 +61,13 @@ def accumulate_contract(n_padded: int, mesh=None, rows=None):
     Zero all-gathers, always: the (M', γ) reduction is a per-shard partial
     sum, never a replicated (m, n) re-gather.  On a multi-device data-only
     mesh the partial sums combine as 1-2 psums of exactly ``n_padded``
-    elements and no all-reduce exceeds that.  With model shards the sums
-    **reduce-scatter** over ``model`` (>= 1) and every N-scale all-reduce
-    carries exactly ``n_padded / n_model`` elements — the per-device
-    communication volume the 2-D sharding exists to bound.
+    elements and no all-reduce exceeds that.  With model shards the
+    reductions consume the 2-D P("data", "model") cohort slices directly —
+    the N axis is pre-split, so there is NO reduce-scatter: the partial
+    sums finish with N-scale all-reduces of exactly ``n_padded / n_model``
+    elements over ``data``, plus the distributed trimmed-quantile's
+    histogram-plane psums over ``model`` (bounded via ``segs``, the
+    segment count — histogram-sized, independent of N).
 
     With ``rows`` (the padded cohort row count) the contract also budgets
     the statically estimated per-device peak at ``(6 + 12*r) * N * 4``
@@ -73,12 +76,13 @@ def accumulate_contract(n_padded: int, mesh=None, rows=None):
     on the canonical fixture; a replicated cohort blows it).
     """
     from repro.analysis.contracts import Contract
+    from repro.kernels.fedfa_quantile.multilevel import histogram_elems
     from repro.sharding.cohort import data_shards, model_shards
     multi = mesh is not None and mesh.size > 1
     ms = model_shards(mesh)
     peak = {}
+    r = max(1, (rows or 1) // data_shards(mesh))
     if rows is not None:
-        r = max(1, rows // data_shards(mesh))
         peak = dict(
             peak_live_bytes_per_device=(None, (6 + 12 * r) * n_padded * 4))
     if not multi:
@@ -86,10 +90,15 @@ def accumulate_contract(n_padded: int, mesh=None, rows=None):
                         description="aggregation path, single device",
                         all_gathers=0, **peak)
     scale = n_padded // ms
-    kw = dict(allreduce_max_elems=scale, scale_allreduces=(1, 2),
-              scale_elems=scale)
+    cap = scale
     if ms > 1:
-        kw["reduce_scatters"] = (1, None)
+        kw = dict(reduce_scatters=0)
+        if segs is not None:
+            cap = max(scale, histogram_elems(r, segs))
+    else:
+        kw = {}
+    kw.update(allreduce_max_elems=cap, scale_allreduces=(1, 2),
+              scale_elems=scale)
     return Contract(
         name=f"agg/ms{ms}",
         description="aggregation path: partial sums, no cohort re-gather",
@@ -97,9 +106,11 @@ def accumulate_contract(n_padded: int, mesh=None, rows=None):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("use_kernel", "interpret", "mesh"))
+                   static_argnames=("use_kernel", "interpret", "mesh",
+                                    "cohort_2d"))
 def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
-               use_kernel=None, interpret=False, mesh=None) -> jax.Array:
+               use_kernel=None, interpret=False, mesh=None,
+               cohort_2d: bool = False) -> jax.Array:
     """Fused Σ_c weights[c]·x[c]·mask over the client axis. x: (m, n).
 
     With ``mesh`` set (and the client axis laid out over its ``data`` axis,
@@ -107,15 +118,21 @@ def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
     ``shard_map``: each device reduces its own client shard — through the
     Pallas kernel on TPU — so the lowering never materializes a replicated
     (m, n) gather.  On a data-only mesh a single n-sized ``psum`` combines
-    the partial sums (output replicated).  With model shards (and n
-    divisible by them) the reduction instead **reduce-scatters**: the model
-    peers of each data shard split that shard's client rows between them
-    (zeroing the other peers' weights — exact, any row count), a
-    ``psum_scatter`` over ``model`` sums the partials while scattering the
-    n axis, and the finishing ``psum`` over ``data`` moves only n/n_model
-    elements per device.  The output is then sharded P("model") — exactly
-    the resident global-buffer layout, so the caller's (M'/Γ, γ = 0) merge
-    stays shard-local.
+    the partial sums (output replicated).
+
+    ``cohort_2d=True`` declares x already lives in the resident
+    P("data", "model") layout (the distributed-quantile norms pass keeps it
+    there): each device reduces its own (m/D, n/n_model) slice and ONE
+    n/n_model-sized ``psum`` over ``data`` finishes the sum — no
+    reduce-scatter, no re-layout.  Otherwise, with model shards (and n
+    divisible by them) the model-replicated reduction **reduce-scatters**:
+    the model peers of each data shard split that shard's client rows
+    between them (zeroing the other peers' weights — exact, any row
+    count), a ``psum_scatter`` over ``model`` sums the partials while
+    scattering the n axis, and the finishing ``psum`` over ``data`` moves
+    only n/n_model elements per device.  Either way the output is sharded
+    P("model") — exactly the resident global-buffer layout, so the
+    caller's (M'/Γ, γ = 0) merge stays shard-local.
     """
     from repro.sharding.cohort import (DATA_AXIS, MODEL_AXIS, model_shards,
                                        shardable)
@@ -126,6 +143,17 @@ def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
     mo = model_shards(mesh)
     if x.shape[1] % mo != 0:     # non-divisible n: data-only reduction
         mo = 1
+
+    if cohort_2d and mo > 1:
+        def _shard2(xs, ws, msk):
+            part = _accum_local(xs, ws, msk, use_kernel, interpret)
+            return jax.lax.psum(part, DATA_AXIS)
+
+        return shard_map(_shard2, mesh=mesh,
+                         in_specs=(P(DATA_AXIS, MODEL_AXIS), P(DATA_AXIS),
+                                   P(MODEL_AXIS)),
+                         out_specs=P(MODEL_AXIS), check_rep=False)(
+                             x, weights, mask)
 
     def _shard(xs, ws, ms):
         if mo > 1:

@@ -70,7 +70,9 @@ def _quantile_fused_kernel(rows_ref, q_ref, t_ref, ss_ref, *, L: int):
 
     v0 = select(r0)
     v1 = select(r1)
-    t = v0 + (v1 - v0) * frac                                 # (rb, 1)
+    # jnp.quantile's exact linear-interpolation arithmetic (bit-equal;
+    # v0 + (v1 - v0)*frac can land one ulp away on long rows)
+    t = v0 * (1.0 - frac) + v1 * frac                         # (rb, 1)
     keep = valid & (x <= t)
     t_ref[...] = t
     ss_ref[...] = jnp.sum(jnp.where(keep, x * x, 0.0), axis=1, keepdims=True)

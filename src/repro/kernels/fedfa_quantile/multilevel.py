@@ -1,0 +1,247 @@
+"""Two-stage (histogram -> refine) trimmed quantile over sharded row slices.
+
+The single-pass kernel in ``kernel.py`` needs the whole row resident in one
+VMEM block, which caps row length and forces the norms pass to consume
+model-replicated P("data") rows.  This module removes both limits with a
+B-ary count-and-partition search over the IEEE-754 bit pattern of |x|:
+
+  * stage 1 (level 0) bins every local element by the top byte of its bit
+    pattern into a per-(client, segment) 256-bin histogram and ``psum``s the
+    HISTOGRAM (never the rows) over the model axis;
+  * stage 2 (levels 1..3) refines one byte per level inside the bracketing
+    bin, so 4 levels resolve the full 32-bit pattern of the order statistic.
+
+For nonnegative f32 the bit pattern is monotone in the value, so after the
+last level the accumulated pattern IS the exact r-th smallest magnitude —
+thresholds are bit-equal to ``jnp.quantile``'s bracketing order statistics
+(same f32 rank arithmetic as the single-pass kernel).  The trimmed Σw² rides
+along: each level also accumulates per-bin Σx² planes, summed strictly below
+the chosen bin at inner levels and inclusively at the last, which yields
+S(v) = Σ x²·[x <= v] for both bracketing statistics v0, v1 without a second
+pass.  Because no data value lies strictly between adjacent order statistics,
+the trimmed sum at the interpolated threshold t is S(v0) when t < v1 and
+S(v1) otherwise.
+
+All four levels call ONE pallas kernel inside a ``fori_loop`` (the level's
+bit shift is a scalar input), so the traced program contains exactly one
+row-sized read site: the read-once property survives arbitrary row length.
+Per level the cross-shard traffic is the (rows, 2, segments, 256) count and
+Σx² planes — histogram-sized, independent of row length, never O(N).
+
+The kernel itself is segment-aware: it consumes the whole local flat slice
+(rows, cols) at once with a static per-column segment id map (-1 marks inert
+padding), building per-segment one-hot matrices so the histogram update is
+two MXU-friendly (segments, tile) @ (tile, bins) matmuls per (client, rank
+path).  Counts accumulate as int32 (exact past 2^24 elements); the in-bracket
+test compares ``bits >> (shift+8)`` against the resolved prefix, which stays
+below 2^24 so the f32 one-hot gather of the expected prefix is exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BINS = 256          # one byte per level: 4 levels cover the 32-bit pattern
+_LEVELS = 4
+_PATHS = 2           # floor and ceil ranks bracketing the quantile position
+TILE = 512          # column tile (lane-aligned); callers pad cols to this
+
+
+def _hist_level_kernel(shift_ref, hi_ref, x_ref, seg_ref, cnt_ref, sq_ref):
+    """One refinement level: per-(client, path, segment) histogram planes.
+
+    shift_ref (1, 1) i32: the level's bit shift (24, 16, 8, 0).
+    hi_ref (m, P, S) i32: expected resolved prefix ``lo >> (shift+8)``.
+    x_ref (m, T) f32 column tile; seg_ref (1, T) i32 segment ids (-1 = pad).
+    cnt_ref (m, P, S, B) i32 / sq_ref (m, P, S, B) f32: accumulated over the
+    column grid (zeroed on the first tile, += on revisits).
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    shift = shift_ref[0, 0]
+    hs = jnp.minimum(shift + 8, 31)      # bit 31 of |x| patterns is 0
+    x = jnp.abs(x_ref[...].astype(jnp.float32))               # (m, T)
+    m, T = x.shape
+    _, P, S, B = cnt_ref.shape
+    seg = seg_ref[0, :]                                       # (T,)
+    valid = seg >= 0
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)         # monotone
+    binv = jax.lax.shift_right_logical(bits, shift) & (B - 1)
+    hi = jax.lax.shift_right_logical(bits, hs)                # < 2^24
+    seg_oh = jnp.where(
+        valid[:, None],
+        (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, S), 1))
+        .astype(jnp.float32),
+        0.0)                                                  # (T, S)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (T, B), 1)
+    for c in range(m):
+        x2 = x[c] * x[c]
+        for p in range(P):
+            # expected prefix per column via exact f32 one-hot gather
+            hi_e = jnp.dot(seg_oh, hi_ref[c, p].astype(jnp.float32))
+            inb = (hi[c] == hi_e.astype(jnp.int32)) & valid   # (T,)
+            bin_oh = jnp.where(
+                inb[:, None] & (iota_b == binv[c][:, None]), 1.0, 0.0)
+            cnt_ref[c, p] += jnp.dot(seg_oh.T, bin_oh).astype(jnp.int32)
+            sq_ref[c, p] += jnp.dot(seg_oh.T, bin_oh * x2[:, None])
+
+
+def _hist_call(x, seg_id, hi, shift, *, interpret: bool):
+    m, C = x.shape
+    _, P, S = hi.shape
+    T = min(C, TILE)
+    assert C % T == 0
+    out_shape = [jax.ShapeDtypeStruct((m, P, S, _BINS), jnp.int32),
+                 jax.ShapeDtypeStruct((m, P, S, _BINS), jnp.float32)]
+    return pl.pallas_call(
+        _hist_level_kernel,
+        grid=(C // T,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((m, P, S), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((m, T), lambda i: (0, i)),
+                  pl.BlockSpec((1, T), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((m, P, S, _BINS), lambda i: (0, 0, 0, 0)),
+                   pl.BlockSpec((m, P, S, _BINS), lambda i: (0, 0, 0, 0))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(shift.reshape(1, 1), hi, x, seg_id.reshape(1, C))
+
+
+def segmented_trimmed_stats(x, seg_id, seg_len, q_seg, *,
+                            axis_name=None, interpret: bool = False):
+    """Exact per-(row, segment) (threshold, trimmed Σw²) over a flat slice.
+
+    x (m, C) f32: each row is one client's local slice of the flat cohort
+    buffer (the model shard's columns when ``axis_name`` is set, the whole
+    row otherwise).  seg_id (C,) i32 maps each local column to its global
+    segment (-1 marks inert padding).  seg_len (S,) i32 holds the GLOBAL
+    element count per segment; q_seg (m, S) f32 the quantile levels.
+
+    Returns (t, ss), both (m, S) f32 and replicated across ``axis_name``:
+    t[c, s] = jnp.quantile(|x| restricted to segment s, q_seg[c, s]) —
+    bit-equal to the single-pass kernel — and ss = Σ x²·[|x| <= t].
+
+    With ``axis_name`` every shard runs the same refinement trajectory on
+    psum'd histograms, so no shard ever sees another shard's rows.
+    """
+    m, C = x.shape
+    S = int(seg_len.shape[0])
+    x = x.astype(jnp.float32)
+    seg_id = seg_id.astype(jnp.int32)
+    nseg = seg_len.astype(jnp.int32)
+    p = q_seg.astype(jnp.float32) * (nseg - 1).astype(jnp.float32)[None, :]
+    i0 = jnp.floor(p)
+    frac = p - i0                                             # (m, S)
+    r0 = i0.astype(jnp.int32)
+    r1 = jnp.minimum(r0 + 1, (nseg - 1)[None, :])
+    rank0 = jnp.stack([r0, r1], axis=1)                       # (m, P, S)
+    lo0 = jnp.zeros((m, _PATHS, S), jnp.int32)
+    sq0 = jnp.zeros((m, _PATHS, S), jnp.float32)
+
+    def level(j, carry):
+        lo, rank, sqb = carry
+        shift = (24 - 8 * j).astype(jnp.int32)
+        hi = jax.lax.shift_right_logical(lo, jnp.minimum(shift + 8, 31))
+        cnt, sq = _hist_call(x, seg_id, hi, shift, interpret=interpret)
+        if axis_name is not None:
+            cnt = jax.lax.psum(cnt, axis_name)
+            sq = jax.lax.psum(sq, axis_name)
+        cum = jnp.cumsum(cnt, axis=-1)                        # (m,P,S,B)
+        # smallest bin with cumulative count > rank
+        bstar = jnp.sum((cum <= rank[..., None]).astype(jnp.int32), axis=-1)
+        prev = jnp.maximum(bstar - 1, 0)[..., None]
+        below = jnp.where(
+            bstar > 0, jnp.take_along_axis(cum, prev, axis=-1)[..., 0], 0)
+        sq_cum = jnp.cumsum(sq, axis=-1)
+        sq_below = jnp.where(
+            bstar > 0, jnp.take_along_axis(sq_cum, prev, axis=-1)[..., 0], 0.0)
+        sq_incl = jnp.take_along_axis(sq_cum, bstar[..., None], axis=-1)[..., 0]
+        # inner levels: Σx² strictly below the bracket; last level: inclusive,
+        # completing S(v) = Σ x²·[x <= v] for the resolved order statistic
+        sqb = sqb + jnp.where(j == _LEVELS - 1, sq_incl, sq_below)
+        rank = rank - below
+        lo = lo + jax.lax.shift_left(bstar, shift)
+        return lo, rank, sqb
+
+    lo, _, sqb = jax.lax.fori_loop(0, _LEVELS, level, (lo0, rank0, sq0))
+    v = jax.lax.bitcast_convert_type(lo, jnp.float32)         # (m, P, S)
+    v0, v1 = v[:, 0], v[:, 1]
+    # jnp.quantile's exact linear-interpolation arithmetic (bit-equal)
+    t = v0 * (1.0 - frac) + v1 * frac
+    # no data value lies strictly between adjacent order statistics
+    ss = jnp.where(t < v1, sqb[:, 0], sqb[:, 1])
+    return t, ss
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def row_trimmed_stats_multilevel(rows, q, *, interpret: bool = False):
+    """Drop-in for ``row_trimmed_stats`` on rows too long for one VMEM block.
+
+    rows (R, L) signed, q (R,) levels.  Each row is its own single-segment
+    client; column padding to the tile size is marked inert via seg id -1.
+    """
+    R, L = rows.shape
+    Cp = -(-L // TILE) * TILE
+    rows = rows.astype(jnp.float32)
+    if Cp != L:
+        rows = jnp.zeros((R, Cp), jnp.float32).at[:, :L].set(rows)
+    col = jax.lax.iota(jnp.int32, Cp)
+    seg_id = jnp.where(col < L, 0, -1)
+    seg_len = jnp.full((1,), L, jnp.int32)
+    t, ss = segmented_trimmed_stats(
+        rows, seg_id, seg_len, q.reshape(R, 1).astype(jnp.float32),
+        interpret=interpret)
+    return t[:, 0], ss[:, 0]
+
+
+def histogram_elems(rows: int, segs: int) -> int:
+    """Upper bound on one level's cross-shard histogram payload in elements
+    (count + Σx² planes, even if XLA merges them into one tuple all-reduce):
+    independent of row length, never O(N).  ``rows`` is the per-data-shard
+    client count."""
+    return 2 * rows * _PATHS * segs * _BINS
+
+
+def multilevel_quantile_contract(slice_bytes=None, *, padded: bool = False,
+                                 name: str = "quantile/multilevel"):
+    """Declared contract of the two-stage path: however long the row, the
+    traced program contains exactly ONE row-sized read site (the histogram
+    pallas_call inside the level loop — while bodies are recursed, the call
+    is one static site) and zero sorts.  ``padded=True`` covers the
+    non-tile-dividing wrapper, whose pad-copy adds one read + scatter.
+    ``slice_bytes`` (the local (m, C) slice) budgets the compiled peak at 6x
+    the slice: the slice, its padded copy and interpret staging."""
+    from repro.analysis.contracts import Contract
+    peak = {} if slice_bytes is None else dict(
+        peak_live_bytes_per_device=(None, 6 * slice_bytes))
+    return Contract(name=name,
+                    description="two-stage multilevel trimmed quantile",
+                    row_reads=(1, 2) if padded else 1, sorts=0, **peak)
+
+
+def distributed_quantile_contract(rows: int, segs: int, slice_bytes=None,
+                                  peak_mult: int = 8):
+    """ISSUE 9 / PR 7 follow-up (b): the distributed trimmed-norm pass over
+    P("data","model") rows.  Exactly 1 row read, 0 sorts, and ZERO gathers
+    or re-layout collectives — the only cross-shard traffic is the psum of
+    the per-level histogram planes, bounded at 2·rows·paths·segs·bins
+    elements (count + Σx² planes; histogram-sized, never O(N)).  ``rows``
+    is the PER-DATA-SHARD client count; ``slice_bytes`` the local
+    (rows, N/model) slice, budgeting the peak WITHOUT the retired
+    model-replicated (m/D, N) transient."""
+    from repro.analysis.contracts import Contract
+    hist = histogram_elems(rows, segs)
+    peak = {} if slice_bytes is None else dict(
+        peak_live_bytes_per_device=(None, peak_mult * slice_bytes))
+    return Contract(name="quantile/dist",
+                    description="distributed two-stage trimmed quantile",
+                    row_reads=1, sorts=0,
+                    all_gathers=0, reduce_scatters=0, all_to_alls=0,
+                    collective_permutes=0,
+                    allreduce_max_elems=hist, **peak)

@@ -14,19 +14,23 @@ over the client cohort, laid out over a 2-D mesh:
     (``global_sharding`` = P("model"), ``cohort_buffer_sharding`` =
     P("data", "model")), FSDP-style.
 
-Inside the round the N axis splits *late*: the trimmed-norm / quantile
-pass needs whole (client, segment) rows, so grafting, densities and norms
-run data-axis-only on a transiently model-replicated (m/D, N) shard
-(``cohort_sharding`` = P("data") — exactly PR 3's layout), with no
-collectives.  Only the two fused (M', γ) reductions split N: each device
-reduces a balanced subset of its client shard, a ``psum_scatter`` over
-``model`` (lowered as a reduce-scatter) combines them while scattering N,
-and one N/n_model-sized ``psum`` over ``data`` finishes the sum (see
-``repro.kernels.fedfa_agg.ops.accumulate``).  The (M'/Γ, γ = 0) merge then
-runs per-shard on the N/n_model slices.  The aggregation path therefore
-lowers with ZERO all-gathers and per-device all-reduce volume ~N/n_model;
-the only all-gather in the whole round is the unavoidable global-model
-broadcast into local training.
+Inside the round the N axis now splits *early*: the trimmed-norm pass
+consumes P("data", "model") slices directly via the two-stage distributed
+quantile (``kernels.fedfa_quantile.multilevel`` — per-level histograms
+``psum``'d over ``model``, never the rows), so densities, norms and both
+fused (M', γ) reductions all run on each device's (m/D, N/n_model) slice:
+the reductions are per-shard partial sums finished by one N/n_model-sized
+``psum`` over ``data`` (no reduce-scatter needed — the N axis is pre-split;
+see ``repro.kernels.fedfa_agg.ops.accumulate``).  The only step still
+touching whole rows is the graft gather (a data-dependent cross-shard row
+permutation), which runs in a transient model-replicated window
+(``cohort_sharding`` = P("data")) bounded by the round contract's
+re-layout caps; with grafting off — or pre-grafted rows, as in the async
+slot pool — the round is 2-D end-to-end.  The (M'/Γ, γ = 0) merge runs
+per-shard on the N/n_model slices.  The aggregation path therefore lowers
+with ZERO all-gathers and per-device all-reduce volume ~N/n_model plus
+histogram-sized quantile planes; the only all-gather in the whole round is
+the unavoidable global-model broadcast into local training.
 
 Uneven cohorts (m % n_data_shards != 0) are handled host-side by padding
 the cohort with inert rows: ``n_data = 0`` zeroes a pad row's weight in
@@ -65,6 +69,19 @@ def model_shards(mesh: Optional[Mesh]) -> int:
     return int(mesh.shape[MODEL_AXIS])
 
 
+def pad_unit(mesh: Optional[Mesh]) -> int:
+    """``FlatIndex(pad_to=)`` for this mesh: the model-shard count, widened
+    to a multiple of the two-stage quantile kernel's column tile when the
+    model axis is real, so each shard's local slice of the N axis tiles the
+    distributed norms pass evenly — the kernel consumes the slice with no
+    staging pad copy, keeping the pass literally read-once."""
+    ms = model_shards(mesh)
+    if ms <= 1:
+        return 1
+    from repro.kernels.fedfa_quantile.multilevel import TILE
+    return ms * TILE
+
+
 def shardable(mesh: Optional[Mesh], m: int) -> bool:
     """Can a client axis of length m be shard_map'ed over this mesh?
     (mesh present, has the data axis, and divides m — padded cohorts always
@@ -99,11 +116,11 @@ def global_sharding(mesh: Mesh) -> NamedSharding:
 
 def cohort_buffer_sharding(mesh: Mesh) -> NamedSharding:
     """The resident donated (m, N) cohort buffer: clients over ``data`` AND
-    the parameter axis over ``model`` — the between-rounds layout.  Inside
-    the round the aggregation consumes the cohort in the pre-split
-    ``cohort_sharding`` layout (norms need whole rows); the output is
-    constrained to this 2-D layout only at the end, a communication-free
-    local slice."""
+    the parameter axis over ``model`` — the between-rounds layout.  Since
+    the distributed two-stage quantile landed, the aggregation consumes
+    this 2-D layout directly (the norms pass psums per-level histograms
+    over ``model`` instead of reading whole rows); only the graft gather
+    still opens a transient model-replicated window."""
     if model_shards(mesh) == 1:
         return cohort_sharding(mesh)
     return NamedSharding(mesh, P(DATA_AXIS, MODEL_AXIS))
@@ -130,25 +147,25 @@ def round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
 def async_admit_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
     """(in_shardings, out_shardings) for the async engine's admit program
 
-      (g_buf, c_buf, masks, gates, cms, mal, batches, keys, written)
+      (g_buf, c_buf, masks, gates, gmaps, cms, mal, batches, keys, written)
         -> (c_buf', losses)
 
     (``repro.core.async_round.make_admit_program``).  The slot-pool c_buf
-    stays in the whole-row P("data") ``cohort_sharding`` layout — NOT the
-    resident 2-D P("data", "model") layout — because the merge's
-    trimmed-norm pass reads whole (client, segment) rows; re-slicing N
-    between admits would force an all-gather back to whole rows inside the
-    merge's aggregation, breaking the zero-all-gather invariant the
-    benchmarks gate.  (A distributed quantile would lift this — ROADMAP
-    follow-up.)  Every stacked argument — including the (rows,) ``written``
-    row mask — arrives in slot order and shards over ``data`` like the
-    resident round, so the admit select is elementwise per data shard and
-    the whole program lowers with zero collectives (``admit_contract``;
-    the replicated runtime-index slot map that used to force a full-pool
-    re-gather is gone).
+    lives in the resident 2-D P("data", "model") ``cohort_buffer_sharding``
+    layout END-TO-END between programs: the distributed two-stage quantile
+    lets the merge's trimmed-norm pass consume N/n_model slices directly,
+    and the admit grafts rows at admission time (the trained rows are still
+    naturally model-replicated whole rows there, so the graft gather is
+    shard-local) before slicing them into the pool.  Each device's resident
+    pool bytes drop by the model-shard factor — the PR 6 follow-up (a) the
+    ROADMAP carried.  Every stacked argument — including the (rows,)
+    ``written`` row mask — arrives in slot order and shards over ``data``
+    like the resident round, so the admit select is elementwise per shard
+    and the program still lowers with zero collectives (``admit_contract``).
     """
     co, gl = cohort_sharding(mesh), global_sharding(mesh)
-    return ((gl, co, co, co, co, co, co, co, co), (co, co))
+    cb = cohort_buffer_sharding(mesh)
+    return ((gl, cb, co, co, co, co, co, co, co, co), (cb, co))
 
 
 def async_merge_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
@@ -157,14 +174,16 @@ def async_merge_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
       (g_buf, c_buf, masks, gates, gmaps, w) -> g_buf'
 
     (``repro.core.async_round.make_merge_program``).  The slot pool arrives
-    already in the whole-row P("data") layout the aggregation consumes
-    (see ``async_admit_shardings``), so the merge lowers exactly like the
-    resident round's aggregation tail: reduce-scatter + N/n_model psum,
-    zero all-gathers.  g_buf keeps the resident P("model") layout on both
-    sides so XLA aliases the donated pair.
+    in the resident 2-D P("data", "model") layout and the aggregation
+    consumes it there directly: rows were grafted at admit, so the merge is
+    2-D end-to-end — per-shard partial sums, histogram-sized quantile
+    psums over ``model`` and one N/n_model psum over ``data``, zero
+    all-gathers and zero re-layout collectives.  g_buf keeps the resident
+    P("model") layout on both sides so XLA aliases the donated pair.
     """
     co, gl = cohort_sharding(mesh), global_sharding(mesh)
-    return ((gl, co, co, co, co, co), gl)
+    cb = cohort_buffer_sharding(mesh)
+    return ((gl, cb, co, co, co, co), gl)
 
 
 def constrain_cohort(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:

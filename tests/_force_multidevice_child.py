@@ -22,10 +22,11 @@ norms, α, or the merged global), resident buffers materially model-sharded
 to the model-sharded global layout.  Prints ``TWO-D OK``.
 
 With ``--agg-collectives-2d`` it lowers the kernelized aggregation under
-the 2x2 mesh and asserts the reduce-scattered structure: ZERO all-gathers,
->= 1 reduce-scatter, no N-sized all-reduce, and every N-scale all-reduce
-exactly N/2 (per-device volume ~N/n_model).  Prints ``AGG COLLECTIVES 2D
-OK``.
+the 2x2 mesh and asserts the distributed two-stage structure (ISSUE 9):
+ZERO all-gathers, ZERO reduce-scatters (the N axis splits early — nothing
+N-wide survives to scatter), and every all-reduce bounded by
+max(N/2, histogram planes) — per-device volume ~N/n_model.  Prints
+``AGG COLLECTIVES 2D OK``.
 
 With ``--async`` it runs the async engine under the 4-device data mesh:
 parity-mode bit-equality with the sharded ``run_rounds`` (fedfa +
@@ -100,7 +101,7 @@ if "--agg-collectives-2d" in sys.argv:
     import jax.numpy as jnp
 
     mesh = make_mesh_2d(2, 2)
-    index = flat.get_index(PARAMS, pad_to=csh.model_shards(mesh))
+    index = flat.get_index(PARAMS, pad_to=csh.pad_unit(mesh))
     runtimes = stack_runtimes(CFG, SPECS)
     pad = csh.pad_rows(M, mesh)
     (masks, gates, gmaps, nd, _, _), _ = csh.pad_cohort(
@@ -115,13 +116,13 @@ if "--agg-collectives-2d" in sys.argv:
         out_shardings=csh.global_sharding(mesh))
     txt = fn.lower(g, x, nd).compile().as_text()
     from repro.kernels.fedfa_agg.ops import accumulate_contract
-    rep = accumulate_contract(index.n_padded, mesh,
-                              rows=M + pad).check(hlo=txt)
+    rep = accumulate_contract(index.n_padded, mesh, rows=M + pad,
+                              segs=index.n_segments).check(hlo=txt)
     assert rep.ok, rep.violations
     assert rep.measured["peak_live_bytes_per_device"] > 0
-    n_rs = rep.measured["reduce_scatters"]
+    assert rep.measured["reduce_scatters"] == 0
     n_half_ars = rep.measured["scale_allreduces"]
-    print(f"collectives 2d: all-gather=0 reduce-scatter={n_rs} "
+    print(f"collectives 2d: all-gather=0 reduce-scatter=0 "
           f"n/2-all-reduce={n_half_ars} "
           f"peak={rep.measured['peak_live_bytes_per_device']}B")
     print("AGG COLLECTIVES 2D OK")
@@ -276,20 +277,50 @@ if "--async" in sys.argv:
     from repro.core.async_round import admit_contract, make_admit_program
     from repro.core.server import default_class_masks
     _, batches_a = data_fn(0)
-    (masks_a, gates_a, _, _, cms_a, mal_a), bpad_a = csh.pad_cohort(
+    (masks_a, gates_a, gmaps_a, _, cms_a, mal_a), bpad_a = csh.pad_cohort(
         stack_runtimes(CFG, SPECS), batches_a, rows - M)
     cms_in = default_class_masks(cms_a, CFG, fl_k, rows)
     keys_a = jax.random.split(KEY, rows)
     written = jnp.ones((rows,), jnp.int32)
     fn_a = make_admit_program(CFG, fl_k, index, any_malicious=False,
                               mesh=MESH, rows=rows)
-    txt_a = fn_a.lower(g, c, masks_a, gates_a, cms_in, mal_a, bpad_a,
-                       keys_a, written).compile().as_text()
+    txt_a = fn_a.lower(g, c, masks_a, gates_a, gmaps_a, cms_in, mal_a,
+                       bpad_a, keys_a, written).compile().as_text()
     rep_a = admit_contract(index, MESH, rows=rows).check(hlo=txt_a)
     assert rep_a.ok, rep_a.violations
     assert rep_a.measured["all_gathers"] == 0
     assert rep_a.measured["peak_live_bytes_per_device"] > 0
     print("async admit collectives: all-gather=0 OK")
+
+    # --- all-overstale no-op regression (ISSUE 9): a merge whose ready
+    # rows ALL exceed staleness_max must be a NO-OP — slots released,
+    # deadline re-armed, g_buf bit-untouched (a divide-by-Σw on the empty
+    # effective cohort would have 0/0-NaN'd the global)
+    from repro.core.async_round import AsyncEngine
+    eng = AsyncEngine(
+        jax.device_put(flat.flatten(index, PARAMS),
+                       csh.global_sharding(MESH)),
+        CFG, fl_k, index, TraceSource(data_fn, lambda i: 1.0), KEY,
+        acfg=AsyncConfig(capacity=3, merge_k=2, staleness_max=1),
+        mesh=MESH)
+    for _ in range(64):
+        if eng.pool.ready(eng.now).any():
+            break
+        eng.step()
+    ready = eng.pool.ready(eng.now)
+    assert ready.any(), "fixture never produced a ready row"
+    eng._materialize()
+    g_host = np.asarray(jax.device_get(eng.g_buf))
+    eng.version = int(eng.pool.version.max()) + eng.acfg.staleness_max + 1
+    n_ready = int(ready.sum())
+    assert eng._merge(ready) is None
+    assert eng.dropped_rows == n_ready and eng.merges == 0
+    assert not eng.pool.occupied[ready].any(), "over-stale slots not freed"
+    assert eng.last_merge_t == eng.now, "deadline not re-armed"
+    g_after = np.asarray(jax.device_get(eng.g_buf))
+    np.testing.assert_array_equal(g_after, g_host)
+    assert np.isfinite(g_after).all()
+    print("all-overstale merge no-op: OK")
 
     # --- _cbufs regression: under the mesh, m=3 and m=4 cohorts both pad
     # to 4 rows and must ping-pong ONE scratch allocation (the old code

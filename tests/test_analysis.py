@@ -139,6 +139,33 @@ def test_quantile_contracts_hold_on_traced_jaxprs():
     assert rep_t.ok, rep_t.violations
 
 
+def test_quantile_contract_fails_on_oracle_path():
+    """ISSUE 9 satellite 1 (non-vacuity): a lowered program that took the
+    jnp-oracle path — as the old ``_MAX_ROW_ELEMS`` fallback silently did
+    for long rows even under ``use_kernel=True`` — must FAIL the fused and
+    multilevel contracts, not pass them vacuously: the oracle's lowering
+    sorts and re-reads the rows."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fedfa_quantile import ops as qops
+    from repro.kernels.fedfa_quantile.multilevel import \
+        multilevel_quantile_contract
+    from repro.kernels.fedfa_quantile.ops import fused_quantile_contract
+
+    rows = jax.random.normal(jax.random.PRNGKey(0), (2, 2048), jnp.float32)
+    q = jnp.full((2,), 0.975, jnp.float32)
+    oracle = jax.make_jaxpr(
+        lambda r, qq: qops.row_trimmed_stats(r, qq, use_kernel=False,
+                                             interpret=False))(rows, q)
+    rep_f = fused_quantile_contract().check(jaxpr=oracle,
+                                            row_elems=rows.size)
+    rep_m = multilevel_quantile_contract().check(jaxpr=oracle,
+                                                 row_elems=rows.size)
+    assert not rep_f.ok and not rep_m.ok
+    joined = " ".join(rep_f.violations)
+    assert "sorts" in joined or "row_reads" in joined
+
+
 # ---------------------------------------------------------------------------
 # contracts: bounds, validation, evaluation
 # ---------------------------------------------------------------------------

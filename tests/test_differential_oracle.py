@@ -125,16 +125,23 @@ def test_async_merges_match_tree_oracle():
               acfg=AsyncConfig.parity(4), eval_every=0, on_merge=rec.append)
     assert len(rec) == 5
     kw = fedfa.STRATEGIES[fl.strategy]
+    saw_pregrafted = False
     for info in rec:
         g_before = flat.unflatten(index, jnp.asarray(info["g_before"]))
         rows = [flat.unflatten(index, jnp.asarray(r)) for r in info["x"]]
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
         masks, gates, gmaps, _, _, _ = stack_runtimes(CFG, info["specs"])
+        if info["pregrafted"]:
+            # general-path rows were grafted at admission — an identity
+            # graft map keeps graft-on weighting without permuting again
+            gmaps = jnp.broadcast_to(jnp.arange(gmaps.shape[1]), gmaps.shape)
+            saw_pregrafted = True
         out_tree = fedfa.aggregate(g_before, stacked, CFG, masks, gates,
                                    gmaps, jnp.asarray(info["w"]),
                                    engine="tree", **kw)
         assert_tree_allclose(out_tree,
                              flat.unflatten(index, jnp.asarray(info["g_after"])))
+    assert saw_pregrafted  # the general bounded-staleness path was exercised
 
 
 @pytest.mark.parametrize("seed", range(3))

@@ -105,3 +105,178 @@ def test_row_quantile_all_zero_rows():
     rows = jnp.zeros((2, 3, 64))
     out = flat._row_quantile(rows, jnp.asarray([0.95, 1.0]), 0.95)
     np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# two-stage multilevel kernel (ISSUE 9): exactness vs jnp.quantile
+# ---------------------------------------------------------------------------
+
+from repro.kernels.fedfa_quantile import multilevel as ml  # noqa: E402
+from repro.kernels.fedfa_quantile import ops as qops  # noqa: E402
+
+
+def _ulp_dist(a, b):
+    """ulp distance between nonnegative f32 arrays (bit-pattern distance —
+    monotone for same-sign floats)."""
+    ai = np.asarray(a, np.float32).view(np.int32).astype(np.int64)
+    bi = np.asarray(b, np.float32).view(np.int32).astype(np.int64)
+    return np.abs(ai - bi)
+
+
+def _check_multilevel(rows, q, rtol_ss=1e-5):
+    """Pin the multilevel path against jnp.quantile on |rows|:
+
+      * integral ranks (frac = 0) are pure order statistics — bit-equal;
+      * interpolated thresholds are within 1 ulp of jnp's linear method
+        (the reference's LAST ulp depends on whether XLA contracts the
+        lerp into an fma, which is not part of the algorithm's contract);
+      * t is bracketed by the 'lower'/'higher' order statistics, bitwise;
+      * the fused trimmed Σw² matches a masked reference at the kernel's
+        own threshold (rtol: summation order differs).
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    t, ss = ml.row_trimmed_stats_multilevel(rows, q, interpret=True)
+    a_abs = jnp.abs(rows)
+    ref = np.asarray(jax.vmap(jnp.quantile)(a_abs, q))
+    lo = np.asarray(jax.vmap(
+        lambda r, qq: jnp.quantile(r, qq, method="lower"))(a_abs, q))
+    hi = np.asarray(jax.vmap(
+        lambda r, qq: jnp.quantile(r, qq, method="higher"))(a_abs, q))
+    t_np = np.asarray(t)
+    # same f32 rank arithmetic as jnp.quantile: position, floor, fraction
+    L = rows.shape[1]
+    p = np.asarray(q, np.float32) * np.float32(L - 1)
+    frac = p - np.floor(p)
+    np.testing.assert_array_equal(t_np[frac == 0], ref[frac == 0])
+    assert (_ulp_dist(t_np, ref) <= 1).all(), \
+        f"threshold off by >1 ulp: {t_np} vs {ref}"
+    assert (t_np >= lo).all() and (t_np <= hi).all()
+    a_np = np.asarray(a_abs, np.float32)
+    ref_ss = np.where(a_np <= t_np[:, None], a_np.astype(np.float64) ** 2,
+                      0.0).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(ss), ref_ss, rtol=rtol_ss,
+                               atol=1e-7)
+    return t_np, frac
+
+
+def test_multilevel_long_rows_vs_jnp():
+    """L > 2**18 — past the single-pass VMEM budget, the regime the old
+    dispatch silently handed to the jnp oracle.  q = 1 exercises an exact
+    endpoint order statistic on the same long rows."""
+    L = 2 ** 18 + 1536                       # tile-divisible: no pad column
+    rows = jax.random.normal(jax.random.PRNGKey(0), (2, L), jnp.float32)
+    _check_multilevel(rows, jnp.asarray([0.9731, 1.0]), rtol_ss=1e-4)
+
+
+def test_multilevel_long_rows_integral_rank_bit_equal():
+    """Integral-rank levels on L > 2**18 rows are pure order statistics and
+    must be BIT-equal to jnp.quantile — the acceptance clause of ISSUE 9.
+    Ranks are screened host-side with the same f32 arithmetic both sides
+    use, so every case asserted is genuinely interpolation-free."""
+    L = 2 ** 18 + 1536
+    ks, qs = [], []
+    for k in (0, 7919, L // 2, L - 2, L - 1):
+        qv = np.float32(k) / np.float32(L - 1)
+        if np.float32(qv) * np.float32(L - 1) == np.float32(k):
+            ks.append(k)
+            qs.append(qv)
+    assert len(ks) >= 2, "no integral f32 ranks found"
+    rows = jax.random.normal(jax.random.PRNGKey(1), (len(ks), L),
+                             jnp.float32)
+    t_np, frac = _check_multilevel(rows, jnp.asarray(qs), rtol_ss=1e-4)
+    assert (frac == 0).all()                 # every case was exact-rank
+
+
+def test_multilevel_one_bin_mass():
+    """All mass in a single bit-pattern bin (constant rows): every level's
+    bracketing bin holds the entire count and the resolved pattern is the
+    constant itself, bit-equal, with ss = L·c²."""
+    c = np.float32(3.14159)
+    rows = jnp.full((2, 1024), c)
+    t, ss = ml.row_trimmed_stats_multilevel(rows, jnp.asarray([0.95, 1.0]),
+                                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(t), c)
+    np.testing.assert_allclose(np.asarray(ss), 1024 * float(c) ** 2,
+                               rtol=1e-5)
+
+
+def test_multilevel_bf16_ties_across_bin_boundary():
+    """bf16-cast rows tie heavily and pile up on byte-boundary bit
+    patterns (a bf16 value's lower mantissa bytes are zero, landing ties
+    exactly ON level boundaries): ranks must still resolve exactly."""
+    rows = jax.random.normal(jax.random.PRNGKey(2), (3, 2048), jnp.float32) \
+        .astype(jnp.bfloat16).astype(jnp.float32)
+    _check_multilevel(rows, jnp.asarray([0.95, 0.9993, 1.0]))
+
+
+def test_multilevel_all_zero_rows():
+    """Fully masked rows: zero threshold and zero trimmed sum, not NaN."""
+    rows = jnp.zeros((2, 1024))
+    t, ss = ml.row_trimmed_stats_multilevel(rows, jnp.asarray([0.95, 1.0]),
+                                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(t), 0.0)
+    np.testing.assert_array_equal(np.asarray(ss), 0.0)
+
+
+def test_multilevel_single_row_and_column_pad():
+    """m = 1 with a non-tile-dividing length: the wrapper pads columns to
+    the tile and marks them seg -1 — inert, never binned into segment 0."""
+    rows = jax.random.normal(jax.random.PRNGKey(3), (1, 700), jnp.float32)
+    _check_multilevel(rows, jnp.asarray([0.97]))
+
+
+def test_multilevel_segmented_matches_per_segment_quantile():
+    """The segment-aware entry point against per-segment jnp.quantile: one
+    flat (m, C) slice holding three segments of different lengths, each
+    with its own per-client level."""
+    lens = (500, 260, 264)                   # sums to 2 * TILE
+    C = sum(lens)
+    assert C % ml.TILE == 0
+    m, S = 2, len(lens)
+    rows = jax.random.normal(jax.random.PRNGKey(4), (m, C), jnp.float32)
+    seg_id = jnp.asarray(np.repeat(np.arange(S), lens).astype(np.int32))
+    q_seg = jnp.asarray([[0.95, 1.0, 0.9737], [0.9871, 0.96, 1.0]],
+                        jnp.float32)
+    t, ss = ml.segmented_trimmed_stats(rows, seg_id,
+                                       jnp.asarray(lens, jnp.int32), q_seg,
+                                       interpret=True)
+    t_np, ss_np = np.asarray(t), np.asarray(ss)
+    start = 0
+    for s, ln in enumerate(lens):
+        seg = jnp.abs(rows[:, start:start + ln])
+        ref = np.asarray(jax.vmap(jnp.quantile)(seg, q_seg[:, s]))
+        lo = np.asarray(jax.vmap(
+            lambda r, qq: jnp.quantile(r, qq, method="lower"))(seg, q_seg[:, s]))
+        hi = np.asarray(jax.vmap(
+            lambda r, qq: jnp.quantile(r, qq, method="higher"))(seg, q_seg[:, s]))
+        assert (_ulp_dist(t_np[:, s], ref) <= 1).all()
+        assert (t_np[:, s] >= lo).all() and (t_np[:, s] <= hi).all()
+        a_np = np.asarray(seg, np.float32)
+        ref_ss = np.where(a_np <= t_np[:, s][:, None],
+                          a_np.astype(np.float64) ** 2, 0.0).sum(axis=1)
+        np.testing.assert_allclose(ss_np[:, s], ref_ss, rtol=1e-5,
+                                   atol=1e-7)
+        start += ln
+
+
+def test_dispatch_long_rows_take_multilevel_not_oracle():
+    """ISSUE 9 bugfix pin: rows past the single-pass VMEM budget with the
+    kernel path explicitly requested dispatch to the two-stage kernel —
+    read-once, sort-free — NEVER to the jnp oracle (whose lowering sorts
+    and re-reads the rows; see the companion contract test)."""
+    from repro.analysis import jaxpr as jaxpr_mod
+    L = 2 ** 18 + 512                        # Lp > _SINGLE_PASS_ELEMS
+    rows = jax.random.normal(jax.random.PRNGKey(5), (2, L), jnp.float32)
+    q = jnp.full((2,), 0.975, jnp.float32)
+    c = jaxpr_mod.trace_counts(
+        lambda r, qq: qops.row_trimmed_stats(r, qq, use_kernel=False,
+                                             interpret=True),
+        rows, q, row_elems=rows.size)
+    assert (c.reads, c.sorts) == (1, 0)
+    # and the result agrees with the multilevel path bit-for-bit
+    t1, ss1 = qops.row_trimmed_stats(rows, q, use_kernel=False,
+                                     interpret=True)
+    t2, ss2 = ml.row_trimmed_stats_multilevel(rows, q, interpret=True)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(ss1), np.asarray(ss2))
