@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: tier1 check lint analysis analysis-json bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async
+.PHONY: tier1 check lint analysis analysis-json bench-round bench-aggregate bench-shard bench-shard-2d bench-quantile bench-async bench-quant
 
 tier1:            ## fast test suite (the driver's acceptance gate)
 	$(PY) -m pytest -x -q
@@ -32,6 +32,11 @@ bench-shard-2d:   ## 2x2 (data, model) mesh only: reduce-scattered aggregation -
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
 		$(PY) benchmarks/bench_shard.py --model-shards 2 \
 		--out results/BENCH_shard_2d.json
+
+bench-quant:      ## quantized-admission round (int8/bf16, fused dequantize + error feedback): bytes-on-wire + resident-byte reductions gated -> BENCH_shard.json
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+		$(PY) benchmarks/bench_shard.py --model-shards 1 2 \
+		--update-dtype bf16 int8
 
 bench-quantile:   ## fused trimmed-quantile kernel vs top_k path (4 forced CPU devices) -> BENCH_quantile.json
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \

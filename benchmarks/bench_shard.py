@@ -19,11 +19,19 @@ mesh with every local device on ``data``; k > 1 -> a real 2-D
     cohort-scale data.  Per-device resident-buffer bytes (g_buf N/n_model,
     c_buf (m/D)·(N/n_model), f32) are recorded alongside the counts.
 
+With ``--update-dtype`` a quantized section rides along on the data-only
+mesh: the int8/bf16 admission round (per-segment scales, fused
+dequantize, server-side error feedback) is timed and lowered, its
+``quantized_round_contract`` gated (zero all-gathers, five donated
+pools, peak budget, read-once fused dequantize), and the bytes-on-wire
+and per-device resident-byte reductions recorded — the int8 wire
+reduction is gated >= 3.5x.
+
 Emits ``BENCH_shard.json`` — the sharding trajectory anchor (see its
 ``schema_notes`` for the gated invariant).
 
   PYTHONPATH=src python benchmarks/bench_shard.py [--smoke] \
-      [--model-shards K ...] [--min-ratio X]
+      [--model-shards K ...] [--min-ratio X] [--update-dtype [DT ...]]
 """
 from __future__ import annotations
 
@@ -52,7 +60,17 @@ SCHEMA_NOTES = (
     "training, though GSPMD may re-layout training intermediates over "
     "the idle model axis.  per_device_bytes records the RESIDENT "
     "buffer footprint (f32): g_buf = n_padded/model_shards, "
-    "c_buf = (m_padded/data_shards)*(n_padded/model_shards)."
+    "c_buf = (m_padded/data_shards)*(n_padded/model_shards).  "
+    "The optional 'quantized' section (--update-dtype, data-only mesh) "
+    "records the quantized-admission round per dtype: "
+    "bytes_on_wire_per_client is the per-round client upload "
+    "(f32 n_padded*4 vs n_padded*itemsize + n_segments*4 scales; the "
+    "int8 reduction is gated >= 3.5x), per_device_resident_bytes the "
+    "inter-round server state (f32 scratch vs two admitted-dtype pools "
+    "[rows + error feedback] plus two f32 scale tables, ~2x at int8), "
+    "and 'contract' the gated quantized_round_contract (zero "
+    "all-gathers, five donated pools, peak budget, read-once fused "
+    "dequantize)."
 )
 
 def _mesh_inputs(cfg, fl, params, specs, batches, mesh, *,
@@ -153,6 +171,135 @@ def _agg_collectives(cfg, fl, params, specs, batches, mesh):
             hlo.sizes(txt, "all-reduce", min_elems=scale))
 
 
+def _quant_collectives(cfg, fl, params, specs, batches, mesh, dt):
+    """Lower + compile the QUANTIZED round (``--update-dtype int8``/
+    ``bf16``: quantized admission with per-segment scales, dequantize
+    fused into the accumulate kernel, server-side error feedback) on the
+    data-only mesh and check ``quantized_round_contract``.
+
+    The HLO gates (zero all-gathers, donated five-buffer ping-pong, peak
+    budget) are measured on the compiled round; the read-once/sort-free
+    fused-dequantize gates on a standalone ``accumulate_quant`` trace over
+    the admitted-dtype rows (the full round's jaxpr touches row-sized f32
+    training transients, so the kernel invariant is pinned where it
+    lives).  Returns (collective counts, contract report)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import hlo
+    from repro.core import flat
+    from repro.core import round as round_mod
+    from repro.kernels.fedfa_agg import ops as agg_ops
+    from repro.sharding import cohort as csh
+
+    fl_q = dataclasses.replace(fl, update_dtype=dt)
+    (index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal, bpad),
+     g, _) = _mesh_inputs(cfg, fl_q, params, specs, batches, mesh)
+    cb, co = csh.cohort_buffer_sharding(mesh), csh.cohort_sharding(mesh)
+    state = round_mod.fresh_quant_state(index, mp, dt)
+    xq, sc, eq, es = (jax.device_put(b, s)
+                      for b, s in zip(state, (cb, co, cb, co)))
+    fn = round_mod.make_flat_round(cfg, fl_q, index, any_malicious=False,
+                                   mesh=mesh, m_real=m_real)
+    keys = jax.random.split(jax.random.PRNGKey(0), mp)
+    txt = fn.lower(g, xq, sc, eq, es, masks, gates, gmaps, nd, cms_in, mal,
+                   bpad, keys).compile().as_text()
+    counts = Counter(op.kind for op in hlo.collectives(txt))
+
+    seg_id, _, _ = flat._segment_maps(index)
+    ones_n = jnp.ones((index.n_padded,), jnp.float32)
+
+    def acc(x_q, w, wtab):
+        return agg_ops.accumulate_quant(x_q, w, wtab, jnp.asarray(seg_id),
+                                        ones_n, use_kernel=True,
+                                        interpret=True)
+
+    jaxpr = jax.make_jaxpr(acc)(
+        jnp.zeros((mp, index.n_padded), flat.update_dtype_of(dt)),
+        jnp.ones((mp,), jnp.float32),
+        jnp.ones((mp, index.n_segments), jnp.float32))
+    report = round_mod.quantized_round_contract(index, mesh, rows=mp).check(
+        hlo=txt, jaxpr=jaxpr, row_elems=mp * index.n_padded)
+    return dict(counts), report
+
+
+def _quant_section(cfg, fl, params, specs, batches, mesh, dts, m, rounds,
+                   rec):
+    """Bench + gate the quantized-admission round per dtype on the
+    data-only mesh; fills ``rec['quantized'][dt]`` and returns overall ok.
+
+    bytes_on_wire is the per-round admission payload a client uploads:
+    f32 = n_padded*4 vs quantized = n_padded*itemsize + S*4 scales (S =
+    segment count, S << N, so int8 lands just under 4x).  The int8
+    reduction is gated >= 3.5x.  per_device_resident_bytes compares the
+    f32 (m/D, N) cohort scratch against the quantized inter-round state —
+    TWO pools (rows + error feedback) in the admitted dtype plus two
+    (m/D, S) f32 scale tables — so the resident win is ~2x at int8, not
+    4x; the 4x is on the wire.  The quantized_round_contract (zero
+    all-gathers, five donated pools, peak budget, read-once fused
+    dequantize) is gated per dtype."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.sharding import cohort as csh
+
+    index = flat.get_index(params, pad_to=csh.pad_unit(mesh))
+    d_sh = csh.data_shards(mesh)
+    mp = m + csh.pad_rows(m, mesh)
+    n, S = index.n_padded, index.n_segments
+    wire_f32 = n * 4
+    res_f32 = (mp // d_sh) * n * 4
+    ok = True
+    qsec = rec["quantized"] = {}
+    for dt in dts:
+        fl_q = dataclasses.replace(fl, update_dtype=dt)
+        dt_q = _time_resident(cfg, fl_q, params, specs, batches, rounds,
+                              mesh=mesh)
+        counts, report = _quant_collectives(cfg, fl, params, specs, batches,
+                                            mesh, dt)
+        isz = jnp.dtype(flat.update_dtype_of(dt)).itemsize
+        wire_q = n * isz + S * 4
+        res_q = (mp // d_sh) * (2 * n * isz + 2 * S * 4)
+        wire_ratio = wire_f32 / wire_q
+        qsec[dt] = {
+            "mean_s": round(dt_q / rounds, 5),
+            "rounds_per_s": round(rounds / dt_q, 3),
+            "collectives": counts,
+            "all_gathers": counts.get("all-gather", 0),
+            "bytes_on_wire_per_client": {
+                "f32": wire_f32, dt: wire_q,
+                "reduction": round(wire_ratio, 3)},
+            "per_device_resident_bytes": {
+                "f32_cohort_scratch": res_f32, f"{dt}_pools": res_q,
+                "reduction": round(res_f32 / res_q, 3)},
+            "contract": {"name": report.contract.name,
+                         "ok": report.ok,
+                         "peak_live_bytes_per_device":
+                             report.measured.get(
+                                 "peak_live_bytes_per_device"),
+                         "violations": report.violations},
+        }
+        print(f"m={m:3d} quant {dt:>4s}  {qsec[dt]['rounds_per_s']:7.2f} "
+              f"r/s  wire {wire_ratio:.2f}x  resident "
+              f"{res_f32 / res_q:.2f}x  collectives {counts}", flush=True)
+        if not report.ok:
+            for v in report.violations:
+                print(f"FAIL contract {report.contract.name} at m={m} "
+                      f"dt={dt}: {v}", flush=True)
+            ok = False
+        if counts.get("all-gather", 0):
+            print(f"FAIL: {counts['all-gather']} all-gather(s) in the "
+                  f"quantized round at m={m} dt={dt}", flush=True)
+            ok = False
+        if dt == "int8" and wire_ratio < 3.5:
+            print(f"FAIL: int8 bytes-on-wire reduction {wire_ratio:.2f}x "
+                  f"< required 3.5x at m={m}", flush=True)
+            ok = False
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cohorts", nargs="+", type=int, default=[4, 16])
@@ -165,6 +312,13 @@ def main() -> None:
                          "data-only mesh, k > 1 = a (n_dev/k, k) "
                          "(data, model) mesh with reduce-scattered "
                          "aggregation and N/k resident slices per device")
+    ap.add_argument("--update-dtype", nargs="*", choices=("bf16", "int8"),
+                    default=None,
+                    help="also bench the quantized round at these admission "
+                         "dtypes on the data-only mesh (bare flag = both): "
+                         "bytes-on-wire + per-device resident bytes per "
+                         "dtype, quantized_round_contract gated, int8 "
+                         "bytes-on-wire reduction gated >= 3.5x")
     ap.add_argument("--smoke", action="store_true",
                     help="m=4 only, 3 rounds — the tier-1 CI configuration")
     ap.add_argument("--min-ratio", type=float, default=None,
@@ -328,6 +482,11 @@ def main() -> None:
                       f"required {min_ratio:.2f} at m={m} ms={ms}",
                       flush=True)
                 ok = False
+        if args.update_dtype is not None and 1 in meshes:
+            dts = list(args.update_dtype) or ["bf16", "int8"]
+            qok = _quant_section(cfg, fl, params, specs, batches,
+                                 meshes[1], dts, m, args.rounds, rec)
+            ok = ok and qok
 
     out = args.out if os.path.isabs(args.out) else os.path.normpath(
         os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",

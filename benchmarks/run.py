@@ -190,8 +190,9 @@ def check() -> None:
 
 
 def _validate_analysis_json(path: str) -> list:
-    """Sanity-gate the machine-readable contract report: the six canonical
-    programs are present, every one declares AND measures
+    """Sanity-gate the machine-readable contract report: all fifteen
+    canonical programs are present (including the quantized round and
+    quantized admit), every one declares AND measures
     peak_live_bytes_per_device, nothing failed, and the sharded programs
     carry collective provenance (blame) rows."""
     problems = []
@@ -203,8 +204,10 @@ def _validate_analysis_json(path: str) -> list:
     if not data.get("ok"):
         problems.append("top-level ok flag is false")
     progs = {p.get("program"): p for p in data.get("programs", [])}
-    expected = ("round/ms1", "round/ms2", "agg/ms1", "agg/ms2",
-                "async/admit", "async/merge", "async/merge-ms2",
+    expected = ("round/ms1", "round/ms2", "round/quant",
+                "agg/ms1", "agg/ms2",
+                "async/admit", "async/admit-quant", "async/merge",
+                "async/merge-ms2",
                 "quantile/fused", "quantile/topk", "quantile/fused-pad",
                 "quantile/topk-pad", "quantile/multilevel", "quantile/dist")
     for name in expected:

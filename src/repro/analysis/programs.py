@@ -101,6 +101,56 @@ def round_report(mesh, m: int = 3) -> Report:
     return round_mod.round_contract(index, mesh, rows=mp).check(hlo=txt)
 
 
+def quant_round_report(mesh, m: int = 3) -> Report:
+    """Lower + compile the QUANTIZED resident round (int8 admission with
+    per-segment scales + server-side error feedback) on the data mesh and
+    check ``quantized_round_contract``: all five resident pools donated,
+    zero all-gathers, the sub-f32 peak budget — plus the read-once /
+    sort-free structure of the fused dequantize-accumulate, measured on a
+    standalone ``accumulate_quant`` trace over the int8 rows (the full
+    round's jaxpr touches row-sized f32 transients during training, so
+    the kernel invariant is pinned where it lives)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flat
+    from repro.core import round as round_mod
+    from repro.kernels.fedfa_agg import ops as agg_ops
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(m)
+    fl = dataclasses.replace(fl, update_dtype="int8")
+    index, m_real, mp, (masks, gates, gmaps, nd, cms_in, mal), bpad = \
+        _padded_inputs(cfg, fl, params, specs, batches, mesh)
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
+    S = index.n_segments
+    cb, co = csh.cohort_buffer_sharding(mesh), csh.cohort_sharding(mesh)
+    state = round_mod.fresh_quant_state(index, mp, fl.update_dtype)
+    xq, sc, eq, es = (jax.device_put(b, s)
+                      for b, s in zip(state, (cb, co, cb, co)))
+    fn = round_mod.make_flat_round(cfg, fl, index, any_malicious=False,
+                                   mesh=mesh, m_real=m_real)
+    keys = jax.random.split(jax.random.PRNGKey(0), mp)
+    txt = fn.lower(g, xq, sc, eq, es, masks, gates, gmaps, nd, cms_in, mal,
+                   bpad, keys).compile().as_text()
+
+    seg_id, _, _ = flat._segment_maps(index)
+    ones_n = jnp.ones((index.n_padded,), jnp.float32)
+
+    def acc(x_q, w, wtab):
+        return agg_ops.accumulate_quant(x_q, w, wtab, jnp.asarray(seg_id),
+                                        ones_n, use_kernel=True,
+                                        interpret=True)
+
+    jaxpr = jax.make_jaxpr(acc)(
+        jnp.zeros((mp, index.n_padded), jnp.int8),
+        jnp.ones((mp,), jnp.float32), jnp.ones((mp, S), jnp.float32))
+    return round_mod.quantized_round_contract(index, mesh, rows=mp).check(
+        hlo=txt, jaxpr=jaxpr, row_elems=mp * index.n_padded)
+
+
 def agg_report(mesh, m: int = 3) -> Report:
     """Lower the aggregation path standalone on the round's own shardings
     (g over ``model``, cohort rows over ``data`` pre-split) and check the
@@ -154,6 +204,46 @@ def admit_report(mesh, capacity: int = 3) -> Report:
     txt = fn.lower(g, c, masks, gates, gmaps, cms_in, mal, bpad, keys,
                    written).compile().as_text()
     return async_round.admit_contract(index, mesh, rows=rows).check(hlo=txt)
+
+
+def quant_admit_report(mesh, capacity: int = 3) -> Report:
+    """Lower the QUANTIZED async admit program (train + error feedback +
+    quantize + slot select over the split pool) and check
+    ``quantized_admit_contract``: all four pool pieces donated, zero
+    all-gathers, no sort anywhere in the traced program (the per-segment
+    scale max is a scatter-max, not a partition)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core import async_round
+    from repro.core import flat
+    from repro.core import round as round_mod
+    from repro.sharding import cohort as csh
+
+    cfg, fl, params, specs, batches = _fixture(capacity)
+    fl = dataclasses.replace(fl, update_dtype="int8")
+    rows = capacity + csh.pad_rows(capacity, mesh)
+    index, _, _, (masks, gates, gmaps, _, cms_in, mal), bpad = _padded_inputs(
+        cfg, fl, params, specs, batches, mesh, rows=rows)
+    g = jax.device_put(flat.flatten(index, params),
+                       csh.global_sharding(mesh))
+    cb, co = csh.cohort_buffer_sharding(mesh), csh.cohort_sharding(mesh)
+    state = round_mod.fresh_quant_state(index, rows, fl.update_dtype)
+    xq, sc, eq, es = (jax.device_put(b, s)
+                      for b, s in zip(state, (cb, co, cb, co)))
+    keys = jax.random.split(jax.random.PRNGKey(0), rows)
+    written = jnp.ones((rows,), dtype=jnp.int32)
+    fn = async_round.make_admit_program(cfg, fl, index,
+                                        any_malicious=False, mesh=mesh,
+                                        rows=rows)
+    args = (g, xq, sc, eq, es, masks, gates, gmaps, cms_in, mal, bpad,
+            keys, written)
+    txt = fn.lower(*args).compile().as_text()
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return async_round.quantized_admit_contract(index, mesh,
+                                                rows=rows).check(
+        hlo=txt, jaxpr=jaxpr)
 
 
 def merge_report(mesh, capacity: int = 3) -> Report:
@@ -296,9 +386,13 @@ def canonical_reports(progress: Callable[[str], None] = lambda s: None
     for label, build in (
             ("round (data mesh)", lambda: round_report(mesh_1d)),
             ("round (2x2 mesh)", lambda: round_report(mesh_2d)),
+            ("quantized round (data mesh)",
+             lambda: quant_round_report(mesh_1d)),
             ("aggregation (data mesh)", lambda: agg_report(mesh_1d)),
             ("aggregation (2x2 mesh)", lambda: agg_report(mesh_2d)),
             ("async admit (data mesh)", lambda: admit_report(mesh_1d)),
+            ("quantized admit (data mesh)",
+             lambda: quant_admit_report(mesh_1d)),
             ("async merge (data mesh)", lambda: merge_report(mesh_1d)),
             ("async merge (2x2 mesh)", lambda: merge_report(mesh_2d)),
             ("quantile jaxpr", quantile_reports),
@@ -346,6 +440,14 @@ def cache_checks() -> List[Tuple[str, List[str]]]:
         ("malicious", round_mod._round_key(cfg, fl, index,
                                            any_malicious=True)),
     ]
+    # the PR 10 bug class: two configs differing ONLY in the cohort
+    # admission dtype must compile (and cache) distinct programs — an
+    # int8 pool fed to the f32 program is a shape error at best
+    import dataclasses
+    for dt in ("bf16", "int8"):
+        variants.append((f"{dt} admission", round_mod._round_key(
+            cfg, dataclasses.replace(fl, update_dtype=dt), index,
+            any_malicious=False)))
     collisions = passes.check_cache_keys(variants)
 
     # retrace audit: a REBUILT identical mesh must hit the program cache,

@@ -56,6 +56,15 @@ are naturally model-replicated whole rows inside the admit program, so
 the data-dependent graft gather is shard-local there, and the merge runs
 ``flat.aggregate_buffers(pregrafted=True)``: 2-D, zero all-gathers, zero
 re-layout collectives (see ``sharding.cohort.async_admit_shardings``).
+
+Quantized admission (``fl.update_dtype`` int8/bf16): the pool becomes
+the 4-tuple (x_q, scales, e_buf, e_scales) — rows are quantized at
+admission time with per-(slot, segment) scales, the slot's server-side
+error-feedback residual re-enters before quantizing, and the merge feeds
+the quantized pool straight into the fused dequantize-aggregate
+(``flat.aggregate_buffers(scales=...)``).  The resident pool bytes drop
+~4x at int8 and the read-once / zero-all-gather structure is unchanged
+(``quantized_admit_contract``).
 """
 from __future__ import annotations
 
@@ -199,6 +208,32 @@ def merge_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
         donated=frozenset({0}), **kw)
 
 
+def quantized_admit_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
+    """Declared contract of the QUANTIZED admit program (``--update-dtype
+    int8``/``bf16``): the layout guarantees of ``admit_contract`` — zero
+    all-gathers, zero full-cohort gathers, the shard-local row select —
+    carry over with the pool split into four donated pieces (params 1-4:
+    quantized rows, scales, error-feedback residual, residual scales), all
+    ping-ponging their own allocation.  Quantize/EF adds no sort or top_k
+    (``sorts == 0`` on the traced program — the per-segment max is a
+    scatter-max, not a partition).  Peak budget ``(2 + 6*r) * N * 4``
+    bytes/device: one extra f32 (r, N) tenant over the f32 admit's
+    ``(2 + 5r)`` covers the error-feedback add + requantize chain —
+    measured 5.5 N-multiples at r = 1 on the canonical 4-device fixture
+    vs 4.95 for the f32 admit; the RESIDENT pool bytes between programs
+    drop ~4x (int8 rows + int8 residuals + two small scale tables)."""
+    from repro.analysis.contracts import Contract
+    r = max(1, rows // cohort_sh.data_shards(mesh))
+    return Contract(
+        name="async/admit-quant",
+        description="quantized admit: train, EF + quantize, select into "
+                    "pool slots",
+        all_gathers=0, full_cohort_gathers=0,
+        cohort_elems=rows * index.n_padded,
+        peak_live_bytes_per_device=(None, (2 + 6 * r) * index.n_padded * 4),
+        donated=frozenset({1, 2, 3, 4}), sorts=0)
+
+
 def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                        *, any_malicious: bool, mesh=None, rows: int):
     """Build (or fetch) the jitted admit program for one pool shape:
@@ -231,6 +266,56 @@ def make_admit_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
         round_mod._ROUND_CACHE.move_to_end(key)
         return fn
     do_graft = bool(STRATEGIES[fl.strategy].get("graft", False))
+
+    if fl.update_dtype != "f32":
+        dens_fn = jax.vmap(functools.partial(flat._density_and_fraction,
+                                             cfg, index))
+
+        def _admit_q(g_buf, c_buf, s_buf, e_buf, es_buf, masks, gates,
+                     gmaps, cms, mal, batches, keys, written):
+            g = flat.unflatten(index, g_buf)
+            updated, losses = cohort_update(
+                g, cfg, fl, masks, gates, batches, cms, mal, keys,
+                any_malicious=any_malicious)
+            x = cohort_sh.constrain_cohort(
+                flat.flatten_stacked(index, updated), mesh)
+            if do_graft:
+                x = cohort_sh.constrain_cohort(
+                    jax.vmap(functools.partial(flat._graft_flat, index))(
+                        x, gmaps), mesh)
+            # quantize at admission (graft + density already applied, like
+            # the resident quantized round): the slot's error-feedback
+            # residual from its PREVIOUS admission re-enters first, then
+            # the new residual replaces it — both only where ``written``;
+            # unwritten slots keep all four pool pieces untouched, so
+            # in-flight rows and their pending residuals survive.  The
+            # density mask wraps the whole sum so a previous occupant's
+            # residual cannot leak outside the new client's subspace
+            # (coordinates with density 0 carry γ weight 0)
+            dens, _ = dens_fn(masks)
+            y = (x + flat.dequantize_cohort(index, e_buf, es_buf)) \
+                * cohort_sh.constrain_cohort(dens, mesh)
+            x_q, scales = flat.quantize_cohort(index, y, fl.update_dtype)
+            e = y - flat.dequantize_cohort(index, x_q, scales)
+            e_q, e_s = flat.quantize_cohort(index, e, fl.update_dtype)
+            wr = (written != 0)
+            c_new = jnp.where(wr[:, None], x_q, c_buf)
+            s_new = jnp.where(wr[:, None], scales, s_buf)
+            e_new = jnp.where(wr[:, None], e_q, e_buf)
+            es_new = jnp.where(wr[:, None], e_s, es_buf)
+            return (cohort_sh.constrain_cohort_buffer(c_new, mesh), s_new,
+                    cohort_sh.constrain_cohort_buffer(e_new, mesh), es_new,
+                    losses)
+
+        jit_kw = {}
+        if mesh is not None:
+            jit_kw["in_shardings"], jit_kw["out_shardings"] = \
+                cohort_sh.quantized_admit_shardings(mesh)
+        fn = jax.jit(_admit_q, donate_argnums=(1, 2, 3, 4), **jit_kw)
+        round_mod._ROUND_CACHE[key] = fn
+        while len(round_mod._ROUND_CACHE) > round_mod._ROUND_CACHE_MAX:
+            round_mod._ROUND_CACHE.popitem(last=False)
+        return fn
 
     def _admit(g_buf, c_buf, masks, gates, gmaps, cms, mal, batches, keys,
                written):
@@ -282,6 +367,24 @@ def make_merge_program(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
         round_mod._ROUND_CACHE.move_to_end(key)
         return fn
     kw = STRATEGIES[fl.strategy]
+
+    if fl.update_dtype != "f32":
+        def _merge_q(g_buf, c_buf, s_buf, masks, gates, gmaps, w):
+            x = cohort_sh.constrain_cohort_buffer(c_buf, mesh)
+            return flat.aggregate_buffers(
+                index, g_buf, x, cfg, masks, gates, gmaps, w, trim=fl.trim,
+                pregrafted=True, scales=s_buf, use_kernel=fl.use_kernel,
+                interpret=fl.interpret, mesh=mesh, **kw)
+
+        jit_kw = {}
+        if mesh is not None:
+            jit_kw["in_shardings"], jit_kw["out_shardings"] = \
+                cohort_sh.quantized_merge_shardings(mesh)
+        fn = jax.jit(_merge_q, donate_argnums=(0,), **jit_kw)
+        round_mod._ROUND_CACHE[key] = fn
+        while len(round_mod._ROUND_CACHE) > round_mod._ROUND_CACHE_MAX:
+            round_mod._ROUND_CACHE.popitem(last=False)
+        return fn
 
     def _merge(g_buf, c_buf, masks, gates, gmaps, w):
         x = cohort_sh.constrain_cohort_buffer(c_buf, mesh)
@@ -363,7 +466,10 @@ class AsyncEngine:
         self.rows = acfg.capacity + cohort_sh.pad_rows(acfg.capacity, mesh)
         self.pool = SlotPool(acfg.capacity, self.rows)
         self.g_buf = g_buf
-        self._c_buf: Optional[jax.Array] = None
+        # f32: one (rows, N) pool; quantized admission dtype: the 4-tuple
+        # (x_q, scales, e_buf, e_scales) — same convention as flat_round
+        self._qmode = fl.update_dtype != "f32"
+        self._c_buf: Optional[Any] = None
         # simulated clock + counters (the benchmark gates on `now`)
         self.now = 0.0
         self.version = 0          # bumps once per successful merge
@@ -439,12 +545,35 @@ class AsyncEngine:
 
     def _ensure_cbuf(self) -> None:
         c = self._c_buf
-        if c is None or c.is_deleted() or c.shape[0] != self.rows:
+        if self._qmode:
+            want = flat.update_dtype_of(self.fl.update_dtype)
+            if round_mod._quant_state_ok(c, self.rows, want):
+                return
+            c = round_mod.fresh_quant_state(self.index, self.rows,
+                                            self.fl.update_dtype)
+            if self.mesh is not None:
+                cb = cohort_sh.cohort_buffer_sharding(self.mesh)
+                co = cohort_sh.cohort_sharding(self.mesh)
+                c = tuple(jax.device_put(b, s)
+                          for b, s in zip(c, (cb, co, cb, co)))
+            self._c_buf = c
+            return
+        if c is None or isinstance(c, tuple) \
+                or c.is_deleted() or c.shape[0] != self.rows:
             c = jnp.zeros((self.rows, self.index.n_padded), jnp.float32)
             if self.mesh is not None:
                 c = jax.device_put(
                     c, cohort_sh.cohort_buffer_sharding(self.mesh))
             self._c_buf = c
+
+    def _pool_x(self) -> np.ndarray:
+        """Host f32 view of the pool rows for ``on_merge`` snapshots —
+        dequantized in qmode (density is a 0/1 mask already baked into the
+        stored values; re-applying it downstream is idempotent)."""
+        if self._qmode:
+            return np.asarray(flat.dequantize_cohort(
+                self.index, self._c_buf[0], self._c_buf[1]))
+        return np.asarray(self._c_buf)
 
     def _materialize(self) -> None:
         """Run the admit program for the pending dispatch group (if any):
@@ -486,9 +615,14 @@ class AsyncEngine:
             any_malicious=any(s.malicious for s in specs),
             mesh=self.mesh, rows=self.rows)
         self._ensure_cbuf()
-        self._c_buf, losses = fn(self.g_buf, self._c_buf, masks, gates,
-                                 gmaps, cms_in, mal, batches_row, keys,
-                                 jnp.asarray(written))
+        if self._qmode:
+            out = fn(self.g_buf, *self._c_buf, masks, gates, gmaps, cms_in,
+                     mal, batches_row, keys, jnp.asarray(written))
+            self._c_buf, losses = tuple(out[:4]), out[4]
+        else:
+            self._c_buf, losses = fn(self.g_buf, self._c_buf, masks, gates,
+                                     gmaps, cms_in, mal, batches_row, keys,
+                                     jnp.asarray(written))
         self.pool.loss[slots] = np.asarray(losses)[slots]
 
     def _merge(self, ready: np.ndarray) -> Optional[float]:
@@ -521,13 +655,17 @@ class AsyncEngine:
                                 mesh=self.mesh, rows=self.rows)
         g_prev = np.asarray(self.g_buf) if self.on_merge else None
         self._ensure_cbuf()
-        self.g_buf = fn(self.g_buf, self._c_buf, masks, gates, gmaps,
-                        jnp.asarray(w))
+        if self._qmode:
+            self.g_buf = fn(self.g_buf, self._c_buf[0], self._c_buf[1],
+                            masks, gates, gmaps, jnp.asarray(w))
+        else:
+            self.g_buf = fn(self.g_buf, self._c_buf, masks, gates, gmaps,
+                            jnp.asarray(w))
         loss = float(np.nanmean(pool.loss[keep]))
         if self.on_merge:
             # pool rows were grafted at admission (when the strategy
             # grafts) — re-aggregating the snapshot must NOT graft again
-            self.on_merge({"x": np.asarray(self._c_buf), "w": w.copy(),
+            self.on_merge({"x": self._pool_x(), "w": w.copy(),
                            "specs": slot_specs, "g_before": g_prev,
                            "g_after": np.asarray(self.g_buf), "loss": loss,
                            "pregrafted": bool(
@@ -562,12 +700,14 @@ class AsyncEngine:
             w[np.asarray(slots)] = [float(s.n_data) for s in specs]
             slot_specs = list(specs) + \
                 [self._pad_spec] * (self.rows - len(specs))
-            # the resident round grafts inside its own aggregation — the
-            # scratch rows it returns are UNgrafted
-            self.on_merge({"x": np.asarray(self._c_buf), "w": w,
+            # the f32 resident round grafts inside its own aggregation —
+            # the scratch rows it returns are UNgrafted; the QUANTIZED
+            # round grafts before quantizing, so its pool rows are grafted
+            self.on_merge({"x": self._pool_x(), "w": w,
                            "specs": slot_specs, "g_before": g_prev,
                            "g_after": np.asarray(self.g_buf),
-                           "loss": lossf, "pregrafted": False})
+                           "loss": lossf, "pregrafted": self._qmode and
+                           bool(STRATEGIES[self.fl.strategy].get("graft"))})
         self.merged_rows += len(specs)
         pool.release(pool.occupied.copy())
         self.version += 1

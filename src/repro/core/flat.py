@@ -247,6 +247,84 @@ def _graft_flat(index: FlatIndex, buf: jax.Array, gmap: jax.Array) -> jax.Array:
     return jnp.take(buf, src, mode="clip")
 
 
+# ---------------------------------------------------------------------------
+# Quantized admission: per-(client, segment) symmetric scales
+# ---------------------------------------------------------------------------
+
+UPDATE_DTYPES = ("f32", "bf16", "int8")
+
+
+def update_dtype_of(name: str):
+    """jnp dtype for an ``--update-dtype`` name (the cohort admission tier)."""
+    if name not in UPDATE_DTYPES:
+        raise ValueError(f"update_dtype must be one of {UPDATE_DTYPES}, "
+                         f"got {name!r}")
+    return {"f32": jnp.float32, "bf16": jnp.bfloat16,
+            "int8": jnp.int8}[name]
+
+
+def _quant_maps(index: FlatIndex):
+    """Static column -> scale-slot map for quantized admission, memoized on
+    the index.  ``col_of`` (n_padded,) int32 sends each buffer position to
+    its segment's scale column, with the inert pad tail sent to the extra
+    slot S — that slot always carries scale 0, so the int8 roundtrip cannot
+    inject nonzero bits into the N-pad."""
+    maps = getattr(index, "_quant_maps", None)
+    if maps is None:
+        seg_id, _, _ = _segment_maps(index)
+        col_of = seg_id.astype(np.int32).copy()
+        col_of[col_of < 0] = index.n_segments
+        maps = (col_of,)
+        index._quant_maps = maps
+    return maps
+
+
+def quantize_cohort(index: FlatIndex, x: jax.Array,
+                    update_dtype: str) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a grafted, density-masked (m, n_padded) f32 cohort to the
+    admission dtype.  Returns (x_q, scales (m, S) f32).
+
+    int8: symmetric per-(client, segment) scales — scale = max|x|/127 over
+    the segment, computed by one scatter-max into an (m, S+1) table (slot S
+    collects the inert pad tail and is dropped).  All-zero segments keep
+    scale 0, so both quantize and dequantize map them to exact zeros.
+    bf16: a plain downcast; scales are all-ones so the fused consumers
+    treat both tiers uniformly.  f32 passes through (identity scales).
+    """
+    m = x.shape[0]
+    S = index.n_segments
+    if update_dtype == "f32":
+        return x, jnp.ones((m, S), jnp.float32)
+    if update_dtype == "bf16":
+        return x.astype(jnp.bfloat16), jnp.ones((m, S), jnp.float32)
+    (col_of,) = _quant_maps(index)
+    col = jnp.asarray(col_of)
+    seg_max = jnp.zeros((m, S + 1), jnp.float32).at[:, col].max(jnp.abs(x))
+    scales = seg_max[:, :S] / 127.0
+    safe = jnp.where(seg_max > 0, seg_max / 127.0, 1.0)       # (m, S+1)
+    q = jnp.clip(jnp.round(x / jnp.take(safe, col, axis=1)), -127.0, 127.0)
+    # belt and braces on the inert tail: its scale slot is 0 (so dequant is
+    # zero regardless), but keep the stored bits zero too
+    q = jnp.where(jnp.asarray(col_of == S)[None, :], 0.0, q)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_cohort(index: FlatIndex, x_q: jax.Array,
+                      scales: jax.Array) -> jax.Array:
+    """f32 (m, n_padded) view of a quantized cohort: x_q · scale[col].  The
+    inert pad tail reads the implicit scale-0 slot, so it dequantizes to
+    exact zeros.  bf16 cohorts carry all-ones scales (plain upcast).  Used
+    by error feedback, oracles and jnp fallbacks — the hot aggregation path
+    never materializes this (m, N) product; dequantization is fused into
+    the kernels via per-segment scale tables."""
+    (col_of,) = _quant_maps(index)
+    m = x_q.shape[0]
+    full = jnp.concatenate(
+        [scales.astype(jnp.float32), jnp.zeros((m, 1), jnp.float32)], axis=1)
+    return x_q.astype(jnp.float32) * jnp.take(full, jnp.asarray(col_of),
+                                              axis=1)
+
+
 def _row_quantile(rows_abs: jax.Array, q: jax.Array, trim: float) -> jax.Array:
     """Per-row ``jnp.quantile(rows_abs, q, axis=-1)`` with per-client q,
     computed exactly from the top-(1-trim) tail via ``lax.top_k`` — the only
@@ -277,7 +355,8 @@ def _rows_trimmed_sq(rows: jax.Array, t: jax.Array) -> jax.Array:
 
 
 def _rows_trimmed_stats(rows: jax.Array, q: jax.Array, trim: float,
-                        use_kernel: bool, interpret: bool) -> Tuple:
+                        use_kernel: bool, interpret: bool,
+                        scale: Optional[jax.Array] = None) -> Tuple:
     """Per-row (quantile threshold, trimmed Σw²) for SIGNED rows (m, R, L)
     with per-client q (m,) -> ((m, R), (m, R)).
 
@@ -286,21 +365,29 @@ def _rows_trimmed_stats(rows: jax.Array, q: jax.Array, trim: float,
     plus the trimmed reduction in one read of each row.  jnp path: exact
     top-(1-trim) tail quantile (``_row_quantile``) then a masked reduction —
     separate passes over the data.
+
+    ``scale`` (m, R) dequantizes quantized rows on the fly: the kernel path
+    forwards it as a per-row constant (the rows stay in their admitted
+    dtype, read once); the jnp path materializes the f32 product first.
     """
     m, R, L = rows.shape
     if use_kernel or interpret:
         t, sq = quant_ops.row_trimmed_stats(
             rows.reshape(m * R, L), jnp.repeat(q, R),
+            scale=None if scale is None else scale.reshape(m * R),
             use_kernel=use_kernel, interpret=interpret)
         return t.reshape(m, R), sq.reshape(m, R)
-    rows_abs = jnp.abs(rows)
+    rows_f = rows.astype(jnp.float32)
+    if scale is not None:
+        rows_f = rows_f * scale[..., None].astype(jnp.float32)
+    rows_abs = jnp.abs(rows_f)
     t = _row_quantile(rows_abs, q, trim)
     return t, _rows_trimmed_sq(rows_abs, t)
 
 
 def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
                   trim: float, use_kernel: bool, interpret: bool,
-                  mesh=None) -> jax.Array:
+                  mesh=None, scales: Optional[jax.Array] = None) -> jax.Array:
     """Per-(client, segment) trimmed norms: (m, N) masked updates +
     (m, n_leaves) active fractions -> (m, S).
 
@@ -320,9 +407,14 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
     (m/D, N) transient is gone.  Requires the index padded with
     ``sharding.cohort.pad_unit`` so the local slice tiles the kernel evenly;
     otherwise the pass falls back to the model-replicated layout.
+
+    ``scales`` (m, S) declares ``xm`` quantized (int8/bf16): per-segment
+    dequant scales ride into the quantile kernels as per-row / per-segment
+    constants — the rows are never re-materialized as f32.
     """
 
-    def norms_local(xm_l, fracs_l):
+    def norms_local(xm_l, fracs_l, *rest):
+        sc_l = rest[0] if rest else None
         m_l = xm_l.shape[0]
         cols = []
         for li, spec in enumerate(index.leaves):
@@ -331,24 +423,30 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
             # shifted quantile: the trim-quantile of active magnitudes equals
             # the 1-(1-trim)·f quantile of the zero-padded row
             q = 1.0 - (1.0 - trim) * fracs_l[:, li]
-            _, sq = _rows_trimmed_stats(rows, q, trim, use_kernel, interpret)
+            sc = None if sc_l is None else sc_l[:, spec.seg0:spec.seg0
+                                                + spec.lead]
+            _, sq = _rows_trimmed_stats(rows, q, trim, use_kernel, interpret,
+                                        scale=sc)
             cols.append(jnp.sqrt(sq))
         return jnp.concatenate(cols, axis=1)
 
     from repro.sharding import cohort as csh
+    extra = () if scales is None else (scales,)
     if not csh.shardable(mesh, xm.shape[0]):
-        return norms_local(xm, fracs)
+        return norms_local(xm, fracs, *extra)
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     ms = csh.model_shards(mesh)
+    extra_spec = () if scales is None else (P("data", None),)
     if (ms > 1 and (use_kernel or interpret)
             and xm.shape[1] % (ms * quant_ml.TILE) == 0):
         seg_id, seg_len, leaf_of = _segment_maps(index)
 
-        def norms_2d(xm_l, fracs_l, seg_l):
+        def norms_2d(xm_l, fracs_l, seg_l, *rest):
             q_seg = 1.0 - (1.0 - trim) * fracs_l[:, jnp.asarray(leaf_of)]
             _, sq = quant_ml.segmented_trimmed_stats(
                 xm_l, seg_l[0], jnp.asarray(seg_len), q_seg,
+                scales=rest[0] if rest else None,
                 axis_name=csh.MODEL_AXIS,
                 interpret=interpret or jax.default_backend() != "tpu")
             return jnp.sqrt(sq)
@@ -357,19 +455,21 @@ def _cohort_norms(index: FlatIndex, xm: jax.Array, fracs: jax.Array,
         # so the traced program's only row-sized read is the kernel itself
         return shard_map(
             norms_2d, mesh=mesh,
-            in_specs=(P("data", "model"), P("data", None), P(None, "model")),
+            in_specs=(P("data", "model"), P("data", None),
+                      P(None, "model")) + extra_spec,
             out_specs=P("data", None), check_rep=False)(
-                xm, fracs, np.asarray(seg_id)[None, :])
+                xm, fracs, np.asarray(seg_id)[None, :], *extra)
     return shard_map(norms_local, mesh=mesh,
-                     in_specs=(P("data", None), P("data", None)),
-                     out_specs=P("data", None), check_rep=False)(xm, fracs)
+                     in_specs=(P("data", None), P("data", None)) + extra_spec,
+                     out_specs=P("data", None), check_rep=False)(
+                         xm, fracs, *extra)
 
 
 def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
                       cfg: ArchConfig, masks: WidthMasks, gates: jax.Array,
                       gmaps: jax.Array, n_data: jax.Array, *,
                       graft: bool = True, pregrafted: bool = False,
-                      scale: bool = True,
+                      scale: bool = True, scales: Optional[jax.Array] = None,
                       trim: float = 0.95, eps: float = 1e-12,
                       use_kernel: Optional[bool] = None,
                       interpret: bool = False, mesh=None) -> jax.Array:
@@ -397,8 +497,21 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
     parameter axis's inert zero tail (``index.n_padded``, see ``FlatIndex``)
     is likewise invisible: density 0 in both sums and outside every norm
     segment.
+
+    ``scales`` (m, S) switches the cohort to QUANTIZED admission: ``x`` is
+    int8/bf16, already grafted AND density-masked (``quantize_cohort``
+    quantizes x·dens, so the 0/1 width mask is baked into the stored
+    values).  Dequantization is fused into every consumer — the trimmed
+    norms read the rows through per-segment scale constants, and the (M')
+    reduction folds scale·α·gate into the per-(client, segment) weight
+    table of ``agg_ops.accumulate_quant`` — so no f32 (m, N) dequantized
+    transient ever exists.  The γ counts side is mask data, identical to
+    the f32 path.
     """
     from repro.sharding import cohort as csh
+    if scales is not None and graft and not pregrafted:
+        raise ValueError("quantized cohorts must be grafted before "
+                         "quantization (pass pregrafted=True)")
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     ms = csh.model_shards(mesh)
@@ -448,9 +561,11 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
 
     alpha = None
     if scale:
-        xm = x_g * dens
+        # quantized rows arrive density-masked, so the mask multiply (an
+        # f32 (m, N) transient) only exists on the f32 path
+        xm = x_g if scales is not None else x_g * dens
         norms = _cohort_norms(index, xm, fracs, trim, use_kernel, interpret,
-                              mesh)                                 # (m, S)
+                              mesh, scales=scales)                  # (m, S)
         # cross-client mean weighted by row validity: pad rows (n_data = 0)
         # must not shift α; with every row valid this is exactly the mean
         valid = (n_data > 0).astype(jnp.float32)                    # (m,)
@@ -464,13 +579,25 @@ def aggregate_buffers(index: FlatIndex, g_flat: jax.Array, x: jax.Array,
         warow = dwrow
     else:
         warow = alpha if dwrow is None else dwrow * alpha
-    contrib = constrain(
-        x_g * dens if warow is None else x_g * dens * gather(warow))
+    ones_n = jnp.ones((index.n_padded,), jnp.float32)
+    if scales is not None:
+        # fused dequantize-accumulate: scale·gate·α collapse into one
+        # (m, S) weight table gathered per column INSIDE the kernel — the
+        # quantized rows are read exactly once, with no (m, N) f32 product
+        seg_id, _, _ = _segment_maps(index)
+        coeff = scales if warow is None else warow * scales
+        Mp = agg_ops.accumulate_quant(
+            x_g, n_data, coeff, jnp.asarray(seg_id), ones_n,
+            use_kernel=use_kernel, interpret=interpret, mesh=mesh,
+            cohort_2d=two_d)
+    else:
+        contrib = constrain(
+            x_g * dens if warow is None else x_g * dens * gather(warow))
+        Mp = agg_ops.accumulate(contrib, n_data, ones_n,
+                                use_kernel=use_kernel, interpret=interpret,
+                                mesh=mesh, cohort_2d=two_d)
     counts = constrain(
         dens if dwrow is None else dens * gather(dwrow))
-    ones_n = jnp.ones((index.n_padded,), jnp.float32)
-    Mp = agg_ops.accumulate(contrib, n_data, ones_n, use_kernel=use_kernel,
-                            interpret=interpret, mesh=mesh, cohort_2d=two_d)
     Gm = agg_ops.accumulate(counts, n_data, ones_n, use_kernel=use_kernel,
                             interpret=interpret, mesh=mesh, cohort_2d=two_d)
 

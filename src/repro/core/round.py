@@ -91,9 +91,12 @@ _ROUND_CACHE_MAX = 16
 
 def _fl_static(fl: FLConfig) -> Tuple:
     """The FLConfig fields the round trace closes over (FLConfig is mutable,
-    so the compiled-program cache keys on a value snapshot)."""
+    so the compiled-program cache keys on a value snapshot).  The cohort
+    admission dtype participates: an int8 and an f32 round of the same
+    cohort shape are different programs with different buffer dtypes, and a
+    key that omitted it would hand one the other's compiled round."""
     return (fl.strategy, fl.lr, fl.task, fl.trim, fl.attack_lambda,
-            fl.use_kernel, fl.interpret)
+            fl.use_kernel, fl.interpret, getattr(fl, "update_dtype", "f32"))
 
 
 def eval_boundary(r: int, rounds: int, eval_every: int) -> bool:
@@ -182,6 +185,44 @@ def round_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
         donated=frozenset({0, 1}), **kw)
 
 
+def quantized_round_contract(index: flat.FlatIndex, mesh=None, *, rows: int):
+    """Declared contract of the QUANTIZED resident round (``--update-dtype
+    int8``/``bf16``; canonical report on the data-parallel mesh).
+
+    Same structural guarantees as ``round_contract`` — no full-cohort
+    gather, donated ping-pong of every resident buffer (g_buf + the
+    quantized cohort/scale/error-feedback pools, params 0-4), zero
+    all-gathers with >= 1 N-sized partial-sum all-reduce on a data mesh —
+    plus the quantization-specific ones, checked on a standalone trace of
+    the fused dequantize-accumulate (``agg_ops.accumulate_quant``):
+    exactly 1 read of the quantized rows, 0 sorts, and because the rows
+    enter the kernel in their admitted dtype there is no materialized f32
+    (m, N) dequant transient.  Peak budget ``(6 + 10r) * N * 4``
+    bytes/device: the RESIDENT inter-round pools drop ~4x (2 int8 (m, N)
+    pools + 2 small scale tables vs one f32 (m, N) scratch) and the
+    aggregation path reads int8 rows, but the in-program transient peak
+    is a little above the f32 round's measurement — the f32 training
+    rows can no longer alias into the (now int8) donated pool, and the
+    error-feedback dequant + requantize chain keeps one extra f32 (m, N)
+    tenant — measured 14.0 N-multiples at r = 1 on the canonical
+    4-device fixture vs 11.0 for the f32 round (whose looser budget is
+    ``(6 + 12r)``).
+    """
+    from repro.analysis.contracts import Contract
+    multi = mesh is not None and mesh.size > 1
+    kw: Dict[str, Any] = {}
+    if multi:
+        kw = dict(all_gathers=0, reduce_scatters=0,
+                  scale_allreduces=(1, None), scale_elems=index.n_padded)
+    r = max(1, rows // cohort_sh.data_shards(mesh))
+    return Contract(
+        name="round/quant",
+        description="quantized round: int8 admission, fused dequantize",
+        full_cohort_gathers=0, cohort_elems=rows * index.n_padded,
+        peak_live_bytes_per_device=(None, (6 + 10 * r) * index.n_padded * 4),
+        donated=frozenset({0, 1, 2, 3, 4}), row_reads=1, sorts=0, **kw)
+
+
 def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                     *, any_malicious: bool, donate: bool = True,
                     mesh=None, m_real: Optional[int] = None):
@@ -216,6 +257,60 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
         return fn
     kw = STRATEGIES[fl.strategy]
 
+    if fl.update_dtype != "f32":
+        import functools
+        do_graft = bool(kw.get("graft", False))
+        dens_fn = jax.vmap(functools.partial(flat._density_and_fraction,
+                                             cfg, index))
+
+        def _round_q(g_buf, c_buf, s_buf, e_buf, es_buf, masks, gates,
+                     gmaps, nd, cms, mal, batches, keys):
+            g = flat.unflatten(index, g_buf)
+            updated, losses = cohort_update(
+                g, cfg, fl, masks, gates, batches, cms, mal, keys,
+                any_malicious=any_malicious)
+            x = cohort_sh.constrain_cohort(
+                flat.flatten_stacked(index, updated), mesh)         # (m, N)
+            if do_graft:
+                x = cohort_sh.constrain_cohort(
+                    jax.vmap(functools.partial(flat._graft_flat, index))(
+                        x, gmaps), mesh)
+            dens, _ = dens_fn(masks)
+            # server-side error feedback: the residual of the PREVIOUS
+            # quantized admission of this dispatch slot re-enters before
+            # quantizing, so compression noise averages out across rounds
+            # instead of biasing the trimmed mean.  The density mask wraps
+            # the WHOLE sum: a slot's next occupant may cover a narrower
+            # width, and residual components outside its mask must not
+            # leak values into coordinates whose density (and hence γ
+            # weight) is 0 — the stored rows stay in the client subspace
+            y = (x + flat.dequantize_cohort(index, e_buf, es_buf)) \
+                * cohort_sh.constrain_cohort(dens, mesh)
+            x_q, scales = flat.quantize_cohort(index, y, fl.update_dtype)
+            e = y - flat.dequantize_cohort(index, x_q, scales)
+            e_q, e_s = flat.quantize_cohort(index, e, fl.update_dtype)
+            g_new = flat.aggregate_buffers(
+                index, g_buf, cohort_sh.constrain_cohort_buffer(x_q, mesh),
+                cfg, masks, gates, gmaps, nd, trim=fl.trim, scales=scales,
+                pregrafted=True, use_kernel=fl.use_kernel,
+                interpret=fl.interpret, mesh=mesh, **kw)
+            loss = jnp.mean(losses if m_real is None else losses[:m_real])
+            return (g_new, cohort_sh.constrain_cohort_buffer(x_q, mesh),
+                    scales, cohort_sh.constrain_cohort_buffer(e_q, mesh),
+                    e_s, loss)
+
+        jit_kw = {}
+        if mesh is not None:
+            jit_kw["in_shardings"], jit_kw["out_shardings"] = \
+                cohort_sh.quantized_round_shardings(mesh)
+        fn = jax.jit(_round_q,
+                     donate_argnums=(0, 1, 2, 3, 4) if donate else (),
+                     keep_unused=donate, **jit_kw)
+        _ROUND_CACHE[key] = fn
+        while len(_ROUND_CACHE) > _ROUND_CACHE_MAX:
+            _ROUND_CACHE.popitem(last=False)
+        return fn
+
     def _round(g_buf, c_buf, masks, gates, gmaps, nd, cms, mal, batches,
                keys):
         g = flat.unflatten(index, g_buf)           # leaf dtypes, inside trace
@@ -247,16 +342,41 @@ def make_flat_round(cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
     return fn
 
 
-def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
+def _quant_state_ok(st, m: int, want) -> bool:
+    """Is ``st`` a live quantized cohort state tuple for m rows of dtype
+    ``want``?  (x_q, scales, e_buf, e_scales) — all four must be undeleted
+    device arrays of the matching shape/dtype."""
+    return (isinstance(st, tuple) and len(st) == 4
+            and not any(b.is_deleted() for b in st)
+            and st[0].shape[0] == m and st[0].dtype == want)
+
+
+def fresh_quant_state(index: flat.FlatIndex, m: int, update_dtype: str):
+    """Zero-initialized quantized cohort state: (x_q, scales, e_buf,
+    e_scales).  Zero error-feedback pools are exact no-ops on the first
+    round (scale 0 dequantizes to zeros)."""
+    want = flat.update_dtype_of(update_dtype)
+    S = index.n_segments
+    return (jnp.zeros((m, index.n_padded), want),
+            jnp.zeros((m, S), jnp.float32),
+            jnp.zeros((m, index.n_padded), want),
+            jnp.zeros((m, S), jnp.float32))
+
+
+def flat_round(g_buf: jax.Array, c_buf, cfg: ArchConfig,
                fl: FLConfig, index: flat.FlatIndex, runtimes, batches, key,
                *, any_malicious: bool = False, mesh=None
-               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+               ) -> Tuple[jax.Array, Any, jax.Array]:
     """One resident round: ``flat_round(g_buf, ...) -> (g_buf', c_buf', loss)``.
 
     runtimes: the ``server.stack_runtimes`` tuple for the selected cohort.
     c_buf may be None (first round of a cohort shape) — a fresh (m, N)
     scratch buffer is allocated; afterwards pass the returned cohort buffer
-    back in so its allocation is reused.
+    back in so its allocation is reused.  With a quantized admission dtype
+    (``fl.update_dtype`` int8/bf16) the cohort state is the TUPLE
+    (x_q, scales, e_buf, e_scales) — quantized rows, their per-segment
+    scales, and the error-feedback residual pools — donated and returned
+    as a unit.
 
     With ``mesh`` set the cohort axis is sharded over the mesh ``data``
     axis; a cohort whose m doesn't divide the data-shard count is padded
@@ -271,7 +391,13 @@ def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
         (masks, gates, gmaps, nd, cms, mal), batches = cohort_sh.pad_cohort(
             runtimes, batches, pad)
         m_real, m = m, m + pad
-    if c_buf is None or c_buf.is_deleted() or c_buf.shape[0] != m:
+    qmode = fl.update_dtype != "f32"
+    if qmode:
+        if not _quant_state_ok(c_buf, m, flat.update_dtype_of(
+                fl.update_dtype)):
+            c_buf = fresh_quant_state(index, m, fl.update_dtype)
+    elif c_buf is None or isinstance(c_buf, tuple) \
+            or c_buf.is_deleted() or c_buf.shape[0] != m:
         c_buf = jnp.zeros((m, index.n_padded), jnp.float32)
     cms_in = default_class_masks(cms, cfg, fl, m)
     # split per-client keys HOST-side (see make_flat_round), for the REAL
@@ -285,6 +411,11 @@ def flat_round(g_buf: jax.Array, c_buf: Optional[jax.Array], cfg: ArchConfig,
                                     (m - m_real,) + keys.shape[1:])])
     fn = make_flat_round(cfg, fl, index, any_malicious=any_malicious,
                          mesh=mesh, m_real=m_real)
+    if qmode:
+        g_buf, x_q, scales, e_q, e_s, loss = fn(
+            g_buf, *c_buf, masks, gates, gmaps, nd, cms_in, mal, batches,
+            keys)
+        return g_buf, (x_q, scales, e_q, e_s), loss
     return fn(g_buf, c_buf, masks, gates, gmaps, nd, cms_in, mal, batches,
               keys)
 
@@ -299,12 +430,16 @@ class ResidentDriver:
     has — not the raw cohort size: under a mesh, distinct real sizes that
     pad to the same row count must ping-pong ONE allocation (keying on
     ``len(specs)`` held a separate, never-donated buffer per real size and
-    kept dead donated buffers referenced)."""
+    kept dead donated buffers referenced).  The key ALSO carries the
+    cohort admission dtype: an int8 and an f32 cohort of the same padded
+    shape are different states (different buffer dtypes, and the quantized
+    one is a (x_q, scales, e_buf, e_scales) tuple) and must never collide
+    on one pool slot."""
 
     def __init__(self, cfg: ArchConfig, fl: FLConfig, index: flat.FlatIndex,
                  mesh=None):
         self.cfg, self.fl, self.index, self.mesh = cfg, fl, index, mesh
-        self._cbufs: Dict[int, jax.Array] = {}
+        self._cbufs: Dict[Tuple[int, str], Any] = {}
 
     def round(self, g_buf: jax.Array, specs: Sequence[ClientSpec], batches,
               key) -> Tuple[jax.Array, jax.Array]:
@@ -312,15 +447,18 @@ class ResidentDriver:
         runtimes = stack_runtimes(self.cfg, specs)
         m = len(specs)
         m_rows = m + cohort_sh.pad_rows(m, self.mesh)
+        pool_key = (m_rows, self.fl.update_dtype)
         g_buf, c_buf, loss = flat_round(
-            g_buf, self._cbufs.get(m_rows), self.cfg, self.fl, self.index,
+            g_buf, self._cbufs.get(pool_key), self.cfg, self.fl, self.index,
             runtimes, batches, key, mesh=self.mesh,
             any_malicious=any(s.malicious for s in specs))
-        self._cbufs[m_rows] = c_buf
+        self._cbufs[pool_key] = c_buf
         # evict entries whose buffer was donated elsewhere (e.g. handed to
         # the async engine) — a deleted jax.Array is dead weight that would
         # otherwise stay referenced forever
-        for k in [k for k, v in self._cbufs.items() if v.is_deleted()]:
+        dead = lambda v: (any(b.is_deleted() for b in v)
+                          if isinstance(v, tuple) else v.is_deleted())
+        for k in [k for k, v in self._cbufs.items() if dead(v)]:
             del self._cbufs[k]
         return g_buf, loss
 

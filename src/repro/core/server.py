@@ -49,6 +49,7 @@ class FLConfig:
     agg_engine: str = "flat"            # "flat" (fused buffer) | "tree"
     use_kernel: Optional[bool] = None   # flat engine: Pallas kernels (None=auto)
     interpret: bool = False             # flat engine: interpret-mode kernels
+    update_dtype: str = "f32"           # cohort admission dtype: f32|bf16|int8
     seed: int = 0
 
 

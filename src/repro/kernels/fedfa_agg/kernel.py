@@ -88,3 +88,51 @@ def scaled_accum(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
         interpret=interpret,
     )(x, w2, m2)
     return out[0]
+
+
+def _quant_accum_kernel(x_ref, w_ref, seg_ref, mask_ref, o_ref):
+    """Fused dequantize-accumulate: o[n] = Σ_c x[c,n]·w[c, seg[n]]·mask[n].
+
+    ``x`` arrives in the admitted dtype (int8/bf16) and is upcast in VMEM
+    only; ``w`` is the (m, S) per-(client, segment) weight table with the
+    dequant scales (and α, depth gates, N_c) already folded in, gathered
+    per column through a segment one-hot matmul — so no f32 copy of the
+    quantized rows ever reaches HBM.  Pad columns carry seg = -1, which
+    zeroes their one-hot row and hence their contribution.
+    """
+    x = x_ref[...].astype(jnp.float32)                       # (m, block)
+    seg = seg_ref[...]                                       # (1, block) i32
+    blk = x.shape[1]
+    _, S = w_ref.shape
+    oh = (seg[0][:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (blk, S), 1)).astype(jnp.float32)         # (block, S)
+    wcol = jax.lax.dot_general(
+        w_ref[...].astype(jnp.float32), oh,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (m, block)
+    o_ref[...] = jnp.sum(x * wcol, axis=0, keepdims=True) \
+        * mask_ref[...].astype(jnp.float32)
+
+
+def quant_accum(x: jax.Array, wtab: jax.Array, seg: jax.Array,
+                mask: jax.Array, *, block: int = 4096,
+                interpret: bool = False) -> jax.Array:
+    """x: (m, n) quantized rows; wtab: (m, S) f32 per-(client, segment)
+    weights (dequant scales folded in); seg: (n,) int32 segment ids (-1 on
+    inert pads); mask: (n,).  Returns (n,) fp32."""
+    m, n = x.shape
+    assert n % block == 0
+    nb = n // block
+    out = pl.pallas_call(
+        _quant_accum_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((m, block), lambda i: (0, i)),
+                  pl.BlockSpec((m, wtab.shape[1]), lambda i: (0, 0)),
+                  pl.BlockSpec((1, block), lambda i: (0, i)),
+                  pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(x, wtab.astype(jnp.float32), seg.reshape(1, n),
+      mask.reshape(1, n).astype(jnp.float32))
+    return out[0]

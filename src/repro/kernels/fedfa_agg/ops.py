@@ -9,7 +9,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.fedfa_agg import ref
-from repro.kernels.fedfa_agg.kernel import scaled_accum, trimmed_sumsq
+from repro.kernels.fedfa_agg.kernel import (quant_accum, scaled_accum,
+                                            trimmed_sumsq)
 
 
 def _on_tpu() -> bool:
@@ -50,6 +51,26 @@ def _accum_local(x: jax.Array, weights: jax.Array, mask: jax.Array,
     mp = jnp.pad(mask, (0, pad))
     out = scaled_accum(xp, weights, mp, block=block,
                        interpret=interpret or not _on_tpu())
+    return out[:n]
+
+
+def _quant_accum_local(x: jax.Array, weights: jax.Array, wtab: jax.Array,
+                       seg: jax.Array, mask: jax.Array,
+                       use_kernel: bool, interpret: bool) -> jax.Array:
+    """Unsharded fused dequantize-accumulate body: the per-client weight
+    folds into the (m, S) table before the kernel, so the quantized rows
+    are consumed by exactly one pass."""
+    wt = wtab.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
+    if not (use_kernel or interpret):
+        return ref.quant_accum_ref(x, wt, seg, mask)
+    m, n = x.shape
+    block = 4096 if n >= 4096 else max(128, 1 << (n - 1).bit_length())
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    sp = jnp.pad(seg, (0, pad), constant_values=-1)
+    mp = jnp.pad(mask, (0, pad))
+    out = quant_accum(xp, wt, sp, mp, block=block,
+                      interpret=interpret or not _on_tpu())
     return out[:n]
 
 
@@ -169,3 +190,70 @@ def accumulate(x: jax.Array, weights: jax.Array, mask: jax.Array, *,
     return shard_map(_shard, mesh=mesh,
                      in_specs=(P(DATA_AXIS, None), P(DATA_AXIS), P(None)),
                      out_specs=out_spec, check_rep=False)(x, weights, mask)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "interpret", "mesh",
+                                    "cohort_2d"))
+def accumulate_quant(x: jax.Array, weights: jax.Array, wtab: jax.Array,
+                     seg: jax.Array, mask: jax.Array, *,
+                     use_kernel=None, interpret=False, mesh=None,
+                     cohort_2d: bool = False) -> jax.Array:
+    """Fused dequantize + Σ_c weights[c]·wtab[c, seg[n]]·x[c, n]·mask[n].
+
+    The quantized counterpart of ``accumulate``: ``x`` stays in its
+    admission dtype (int8/bf16) end to end — dequant scales (times α and
+    depth gates) enter through the per-(client, segment) table ``wtab``
+    and are gathered per column inside the kernel, so the rows keep the
+    read-once property and no (m, n) f32 dequant transient is ever
+    materialized.  ``seg`` is the static per-column segment-id row ((n,)
+    int32, -1 on the inert pad tail — those columns contribute zero).
+
+    Sharding mirrors ``accumulate`` exactly: data-shard partial sums
+    finished by one n-sized psum; ``cohort_2d`` consumes P("data",
+    "model") slices with an n/n_model psum over ``data``; otherwise model
+    peers split client rows and psum_scatter over ``model``.  Output is
+    P("model") with model shards, replicated without.
+    """
+    from repro.sharding.cohort import (DATA_AXIS, MODEL_AXIS, model_shards,
+                                       shardable)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not shardable(mesh, x.shape[0]):
+        return _quant_accum_local(x, weights, wtab, seg, mask,
+                                  use_kernel, interpret)
+    mo = model_shards(mesh)
+    if x.shape[1] % mo != 0:     # non-divisible n: data-only reduction
+        mo = 1
+    seg2 = seg.reshape(1, -1)
+
+    if cohort_2d and mo > 1:
+        def _shard2(xs, ws, wt, sg, msk):
+            part = _quant_accum_local(xs, ws, wt, sg[0], msk,
+                                      use_kernel, interpret)
+            return jax.lax.psum(part, DATA_AXIS)
+
+        return shard_map(_shard2, mesh=mesh,
+                         in_specs=(P(DATA_AXIS, MODEL_AXIS), P(DATA_AXIS),
+                                   P(DATA_AXIS, None), P(None, MODEL_AXIS),
+                                   P(MODEL_AXIS)),
+                         out_specs=P(MODEL_AXIS), check_rep=False)(
+                             x, weights, wtab, seg2, mask)
+
+    def _shard(xs, ws, wt, sg, msk):
+        if mo > 1:
+            slot = (jnp.arange(xs.shape[0]) * mo) // xs.shape[0]
+            ws = jnp.where(slot == jax.lax.axis_index(MODEL_AXIS), ws, 0.0)
+        part = _quant_accum_local(xs, ws, wt, sg[0], msk,
+                                  use_kernel, interpret)
+        if mo > 1:
+            part = jax.lax.psum_scatter(part, MODEL_AXIS,
+                                        scatter_dimension=0, tiled=True)
+        return jax.lax.psum(part, DATA_AXIS)
+
+    out_spec = P(MODEL_AXIS) if mo > 1 else P(None)
+    return shard_map(_shard, mesh=mesh,
+                     in_specs=(P(DATA_AXIS, None), P(DATA_AXIS),
+                               P(DATA_AXIS, None), P(None, None), P(None)),
+                     out_specs=out_spec, check_rep=False)(
+                         x, weights, wtab, seg2, mask)

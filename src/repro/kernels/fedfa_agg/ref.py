@@ -13,3 +13,12 @@ def scaled_accum_ref(x, weights, mask):
     xf = x.astype(jnp.float32)
     return jnp.einsum("mn,m->n", xf, weights.astype(jnp.float32)) \
         * mask.astype(jnp.float32)
+
+
+def quant_accum_ref(x, wtab, seg, mask):
+    """Σ_c x[c,n]·wtab[c, seg[n]]·mask[n]; seg = -1 columns contribute 0."""
+    valid = (seg >= 0).astype(jnp.float32)
+    w = jnp.take(wtab.astype(jnp.float32),
+                 jnp.clip(seg, 0, wtab.shape[1] - 1), axis=1) * valid[None, :]
+    return jnp.sum(x.astype(jnp.float32) * w, axis=0) \
+        * mask.astype(jnp.float32)

@@ -40,8 +40,12 @@ _INF_BITS = 0x7F800000
 _ITERS = 31
 
 
-def _quantile_fused_kernel(rows_ref, q_ref, t_ref, ss_ref, *, L: int):
-    x = jnp.abs(rows_ref[...].astype(jnp.float32))            # (rb, Lp)
+def _quantile_fused_kernel(rows_ref, q_ref, s_ref, t_ref, ss_ref, *, L: int):
+    # s_ref (rb, 1): per-row dequant scale — quantized rows (int8/bf16)
+    # upcast in VMEM and scale on the fly, so the quantile walks dequantized
+    # magnitudes in the same single read.  f32 rows pass scale 1.0 (the
+    # multiply is exact, preserving bit-equality with jnp.quantile).
+    x = jnp.abs(rows_ref[...].astype(jnp.float32) * s_ref[...])   # (rb, Lp)
     col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
     valid = col < L
     bits = jax.lax.bitcast_convert_type(x, jnp.int32)         # monotone
@@ -79,24 +83,30 @@ def _quantile_fused_kernel(rows_ref, q_ref, t_ref, ss_ref, *, L: int):
 
 
 def quantile_fused(rows: jax.Array, q: jax.Array, *, L: int,
-                   block_rows: int = 8,
+                   block_rows: int = 8, scale: jax.Array = None,
                    interpret: bool = False) -> tuple:
-    """rows: (R, Lp) f32 signed, lane-padded past column L with zeros;
+    """rows: (R, Lp) signed, lane-padded past column L with zeros;
     q: (R,) quantile levels in [0, 1].  R % block_rows == 0, Lp % 128 == 0.
-    Returns (t, ss) f32 (R,): the |.|-quantile threshold and trimmed Σw²."""
+    ``scale`` (R,) dequantizes int8/bf16 rows in-kernel (None = f32 rows,
+    scale 1).  Returns (t, ss) f32 (R,): the |.|-quantile threshold and
+    trimmed Σw², both in dequantized units."""
     R, Lp = rows.shape
     assert R % block_rows == 0 and Lp % 128 == 0 and 1 <= L <= Lp
     nb = R // block_rows
+    if scale is None:
+        scale = jnp.ones((R,), jnp.float32)
     kernel = functools.partial(_quantile_fused_kernel, L=L)
     t, ss = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[pl.BlockSpec((block_rows, Lp), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
                    pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((R, 1), jnp.float32),
                    jax.ShapeDtypeStruct((R, 1), jnp.float32)],
         interpret=interpret,
-    )(rows, q.reshape(R, 1).astype(jnp.float32))
+    )(rows, q.reshape(R, 1).astype(jnp.float32),
+      scale.reshape(R, 1).astype(jnp.float32))
     return t[:, 0], ss[:, 0]

@@ -50,12 +50,18 @@ _PATHS = 2           # floor and ceil ranks bracketing the quantile position
 TILE = 512          # column tile (lane-aligned); callers pad cols to this
 
 
-def _hist_level_kernel(shift_ref, hi_ref, x_ref, seg_ref, cnt_ref, sq_ref):
+def _hist_level_kernel(shift_ref, hi_ref, x_ref, seg_ref, sc_ref, cnt_ref,
+                       sq_ref):
     """One refinement level: per-(client, path, segment) histogram planes.
 
     shift_ref (1, 1) i32: the level's bit shift (24, 16, 8, 0).
     hi_ref (m, P, S) i32: expected resolved prefix ``lo >> (shift+8)``.
-    x_ref (m, T) f32 column tile; seg_ref (1, T) i32 segment ids (-1 = pad).
+    x_ref (m, T) column tile (f32, or the quantized admission dtype);
+    seg_ref (1, T) i32 segment ids (-1 = pad).
+    sc_ref (m, S) f32 per-(client, segment) dequant scales: the byte walk
+    bins DEQUANTIZED magnitudes — the scale is gathered per column through
+    the same segment one-hot the histograms use (all-ones on the f32 path,
+    where the multiply is exact).
     cnt_ref (m, P, S, B) i32 / sq_ref (m, P, S, B) f32: accumulated over the
     column grid (zeroed on the first tile, += on revisits).
     """
@@ -66,19 +72,25 @@ def _hist_level_kernel(shift_ref, hi_ref, x_ref, seg_ref, cnt_ref, sq_ref):
 
     shift = shift_ref[0, 0]
     hs = jnp.minimum(shift + 8, 31)      # bit 31 of |x| patterns is 0
-    x = jnp.abs(x_ref[...].astype(jnp.float32))               # (m, T)
-    m, T = x.shape
+    m, T = x_ref.shape
     _, P, S, B = cnt_ref.shape
     seg = seg_ref[0, :]                                       # (T,)
     valid = seg >= 0
-    bits = jax.lax.bitcast_convert_type(x, jnp.int32)         # monotone
-    binv = jax.lax.shift_right_logical(bits, shift) & (B - 1)
-    hi = jax.lax.shift_right_logical(bits, hs)                # < 2^24
     seg_oh = jnp.where(
         valid[:, None],
         (seg[:, None] == jax.lax.broadcasted_iota(jnp.int32, (T, S), 1))
         .astype(jnp.float32),
         0.0)                                                  # (T, S)
+    # scales are nonnegative, so |x·scale| = |x|·scale; inert columns get
+    # scale 0 but are excluded from every histogram by seg_oh anyway
+    scl = jax.lax.dot_general(
+        sc_ref[...].astype(jnp.float32), seg_oh,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (m, T)
+    x = jnp.abs(x_ref[...].astype(jnp.float32) * scl)         # (m, T)
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)         # monotone
+    binv = jax.lax.shift_right_logical(bits, shift) & (B - 1)
+    hi = jax.lax.shift_right_logical(bits, hs)                # < 2^24
     iota_b = jax.lax.broadcasted_iota(jnp.int32, (T, B), 1)
     for c in range(m):
         x2 = x[c] * x[c]
@@ -92,7 +104,7 @@ def _hist_level_kernel(shift_ref, hi_ref, x_ref, seg_ref, cnt_ref, sq_ref):
             sq_ref[c, p] += jnp.dot(seg_oh.T, bin_oh * x2[:, None])
 
 
-def _hist_call(x, seg_id, hi, shift, *, interpret: bool):
+def _hist_call(x, seg_id, sc, hi, shift, *, interpret: bool):
     m, C = x.shape
     _, P, S = hi.shape
     T = min(C, TILE)
@@ -105,34 +117,46 @@ def _hist_call(x, seg_id, hi, shift, *, interpret: bool):
         in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
                   pl.BlockSpec((m, P, S), lambda i: (0, 0, 0)),
                   pl.BlockSpec((m, T), lambda i: (0, i)),
-                  pl.BlockSpec((1, T), lambda i: (0, i))],
+                  pl.BlockSpec((1, T), lambda i: (0, i)),
+                  pl.BlockSpec((m, S), lambda i: (0, 0))],
         out_specs=[pl.BlockSpec((m, P, S, _BINS), lambda i: (0, 0, 0, 0)),
                    pl.BlockSpec((m, P, S, _BINS), lambda i: (0, 0, 0, 0))],
         out_shape=out_shape,
         interpret=interpret,
-    )(shift.reshape(1, 1), hi, x, seg_id.reshape(1, C))
+    )(shift.reshape(1, 1), hi, x, seg_id.reshape(1, C), sc)
 
 
-def segmented_trimmed_stats(x, seg_id, seg_len, q_seg, *,
+def segmented_trimmed_stats(x, seg_id, seg_len, q_seg, *, scales=None,
                             axis_name=None, interpret: bool = False):
     """Exact per-(row, segment) (threshold, trimmed Σw²) over a flat slice.
 
-    x (m, C) f32: each row is one client's local slice of the flat cohort
+    x (m, C): each row is one client's local slice of the flat cohort
     buffer (the model shard's columns when ``axis_name`` is set, the whole
     row otherwise).  seg_id (C,) i32 maps each local column to its global
     segment (-1 marks inert padding).  seg_len (S,) i32 holds the GLOBAL
     element count per segment; q_seg (m, S) f32 the quantile levels.
 
+    ``scales`` (m, S) declares x quantized (int8/bf16): the rows stay in
+    the admitted dtype and the kernel dequantizes per column through the
+    per-segment constants, so the byte walk operates on dequantized
+    magnitudes with no extra row pass.  None keeps the f32 path (all-ones
+    scales in-kernel; the multiply is exact).
+
     Returns (t, ss), both (m, S) f32 and replicated across ``axis_name``:
-    t[c, s] = jnp.quantile(|x| restricted to segment s, q_seg[c, s]) —
-    bit-equal to the single-pass kernel — and ss = Σ x²·[|x| <= t].
+    t[c, s] = jnp.quantile(dequantized |x| restricted to segment s,
+    q_seg[c, s]) — bit-equal to the single-pass kernel — and
+    ss = Σ x²·[|x| <= t] in dequantized units.
 
     With ``axis_name`` every shard runs the same refinement trajectory on
     psum'd histograms, so no shard ever sees another shard's rows.
     """
     m, C = x.shape
     S = int(seg_len.shape[0])
-    x = x.astype(jnp.float32)
+    if scales is None:
+        x = x.astype(jnp.float32)
+        sc = jnp.ones((m, S), jnp.float32)
+    else:
+        sc = scales.astype(jnp.float32)
     seg_id = seg_id.astype(jnp.int32)
     nseg = seg_len.astype(jnp.int32)
     p = q_seg.astype(jnp.float32) * (nseg - 1).astype(jnp.float32)[None, :]
@@ -148,7 +172,7 @@ def segmented_trimmed_stats(x, seg_id, seg_len, q_seg, *,
         lo, rank, sqb = carry
         shift = (24 - 8 * j).astype(jnp.int32)
         hi = jax.lax.shift_right_logical(lo, jnp.minimum(shift + 8, 31))
-        cnt, sq = _hist_call(x, seg_id, hi, shift, interpret=interpret)
+        cnt, sq = _hist_call(x, seg_id, sc, hi, shift, interpret=interpret)
         if axis_name is not None:
             cnt = jax.lax.psum(cnt, axis_name)
             sq = jax.lax.psum(sq, axis_name)
@@ -180,22 +204,28 @@ def segmented_trimmed_stats(x, seg_id, seg_len, q_seg, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def row_trimmed_stats_multilevel(rows, q, *, interpret: bool = False):
+def row_trimmed_stats_multilevel(rows, q, *, scale=None,
+                                 interpret: bool = False):
     """Drop-in for ``row_trimmed_stats`` on rows too long for one VMEM block.
 
     rows (R, L) signed, q (R,) levels.  Each row is its own single-segment
     client; column padding to the tile size is marked inert via seg id -1.
+    ``scale`` (R,) is the per-row dequant scale of quantized rows (the rows
+    keep their admitted dtype end to end).
     """
     R, L = rows.shape
     Cp = -(-L // TILE) * TILE
-    rows = rows.astype(jnp.float32)
+    if scale is None:
+        rows = rows.astype(jnp.float32)
     if Cp != L:
-        rows = jnp.zeros((R, Cp), jnp.float32).at[:, :L].set(rows)
+        rows = jnp.zeros((R, Cp), rows.dtype).at[:, :L].set(rows)
     col = jax.lax.iota(jnp.int32, Cp)
     seg_id = jnp.where(col < L, 0, -1)
     seg_len = jnp.full((1,), L, jnp.int32)
     t, ss = segmented_trimmed_stats(
         rows, seg_id, seg_len, q.reshape(R, 1).astype(jnp.float32),
+        scales=None if scale is None else
+        scale.reshape(R, 1).astype(jnp.float32),
         interpret=interpret)
     return t[:, 0], ss[:, 0]
 

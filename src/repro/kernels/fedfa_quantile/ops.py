@@ -76,6 +76,7 @@ def topk_tail_contract(block_bytes=None, *, padded: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def row_trimmed_stats(rows: jax.Array, q: jax.Array, *,
+                      scale: jax.Array = None,
                       use_kernel=None, interpret: bool = False) -> tuple:
     """Fused per-row (quantile threshold, trimmed Σw²) in ONE pass.
 
@@ -83,6 +84,11 @@ def row_trimmed_stats(rows: jax.Array, q: jax.Array, *,
     q: (R,) quantile levels in [0, 1].  Returns f32 ((R,), (R,)):
     t[r] = jnp.quantile(|rows[r]|, q[r]) and
     ss[r] = Σ rows[r]²·[|rows[r]| <= t[r]].
+
+    ``scale`` (R,) declares the rows quantized (int8/bf16): the kernel
+    paths keep the admitted dtype in HBM and dequantize in VMEM through
+    the per-row constant, preserving read-once; only the explicit-oracle
+    path materializes the f32 product.
 
     Dispatch: rows that fit one VMEM block go to the single-pass kernel;
     longer rows (embedding-scale leaves) go to the two-stage multilevel
@@ -93,21 +99,28 @@ def row_trimmed_stats(rows: jax.Array, q: jax.Array, *,
         use_kernel = _on_tpu()
     R, L = rows.shape
     if not (use_kernel or interpret):
+        if scale is not None:
+            rows = rows.astype(jnp.float32) \
+                * scale[:, None].astype(jnp.float32)
         return ref.row_trimmed_stats_ref(rows, q)
     Lp = ((L + _LANES - 1) // _LANES) * _LANES
     if Lp > _SINGLE_PASS_ELEMS:
         return multilevel.row_trimmed_stats_multilevel(
-            rows, q, interpret=interpret or not _on_tpu())
+            rows, q, scale=scale, interpret=interpret or not _on_tpu())
     rb = max(1, min(_BLOCK_ROWS, R, _SINGLE_PASS_ELEMS // Lp))
     Rp = ((R + rb - 1) // rb) * rb
+    want = rows.dtype if scale is not None else jnp.float32
     if Lp == L and Rp == R:
-        rows_p, q_p = rows.astype(jnp.float32), q.astype(jnp.float32)
+        rows_p, q_p = rows.astype(want), q.astype(jnp.float32)
+        s_p = None if scale is None else scale.astype(jnp.float32)
     else:
         # lane pads are masked out in-kernel (any value works); row pads get
         # q = 1 on zero rows (t = 0, ss = 0) and are sliced off below
-        rows_p = jnp.zeros((Rp, Lp), jnp.float32) \
-            .at[:R, :L].set(rows.astype(jnp.float32))
+        rows_p = jnp.zeros((Rp, Lp), want).at[:R, :L].set(rows.astype(want))
         q_p = jnp.ones((Rp,), jnp.float32).at[:R].set(q.astype(jnp.float32))
-    t, ss = quantile_fused(rows_p, q_p, L=L, block_rows=rb,
+        s_p = None if scale is None else \
+            jnp.ones((Rp,), jnp.float32).at[:R].set(
+                scale.astype(jnp.float32))
+    t, ss = quantile_fused(rows_p, q_p, L=L, block_rows=rb, scale=s_p,
                            interpret=interpret or not _on_tpu())
     return t[:R], ss[:R]

@@ -94,7 +94,8 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
            async_deadline: float = float("inf"),
            mesh: Optional[str] = None,
            use_kernel: Optional[bool] = None,
-           interpret: bool = False, ckpt: Optional[str] = None,
+           interpret: bool = False, update_dtype: str = "f32",
+           ckpt: Optional[str] = None,
            quiet: bool = False) -> dict:
     import jax
     import jax.numpy as jnp
@@ -128,7 +129,7 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
     fl = FLConfig(participation=participation, local_steps=local_steps,
                   lr=lr, attack_lambda=attack_lambda, strategy=strategy,
                   task=task, agg_engine=agg_engine, use_kernel=use_kernel,
-                  interpret=interpret, seed=seed)
+                  interpret=interpret, update_dtype=update_dtype, seed=seed)
 
     hist = {"round": [], "loss": [], "global_acc": [], "local_acc": []}
     test = pipeline.eval_batch_cls(n_classes, cfg.vocab_size, 256, seq_len,
@@ -197,6 +198,16 @@ def run_fl(arch: str, rounds: int, n_clients: int, *, strategy: str = "fedfa",
             print(f"{driver} driver is flat-native; falling back to the "
                   "per-round driver for agg_engine=tree", flush=True)
         driver = "per-round"
+    if update_dtype != "f32" and driver == "per-round":
+        # quantized admission lives in the resident/async flat programs;
+        # the per-round driver re-dispatches trees and has no cohort pool
+        # to quantize into
+        if not quiet:
+            print(f"--update-dtype {update_dtype} needs the resident or "
+                  "async driver; running the per-round driver at f32",
+                  flush=True)
+        import dataclasses
+        fl = dataclasses.replace(fl, update_dtype="f32")
 
     from repro.launch.mesh import get_mesh
     mesh_obj = get_mesh(mesh)
@@ -315,6 +326,12 @@ def main() -> None:
                     help="flat engine: Pallas kernel dispatch (auto=TPU only)")
     ap.add_argument("--interpret", action="store_true",
                     help="flat engine: run Pallas kernels in interpret mode")
+    ap.add_argument("--update-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="cohort admission dtype (resident/async drivers): "
+                         "int8/bf16 admit quantized rows with per-segment "
+                         "scales + server-side error feedback; the fused "
+                         "kernels dequantize in VMEM")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path prefix (written at eval boundaries)")
     ap.add_argument("--out", default=None)
@@ -338,7 +355,8 @@ def main() -> None:
                      mesh=args.mesh_shape or args.mesh,
                      use_kernel={"auto": None, "on": True,
                                  "off": False}[args.use_kernel],
-                     interpret=args.interpret, ckpt=args.ckpt)
+                     interpret=args.interpret,
+                     update_dtype=args.update_dtype, ckpt=args.ckpt)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=1)

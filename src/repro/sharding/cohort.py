@@ -144,6 +144,54 @@ def round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
     return ((gl, cb, co, co, co, co, co, co, co, co), (gl, cb, rep))
 
 
+def quantized_round_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """(in_shardings, out_shardings) for the QUANTIZED resident round
+
+      (g_buf, c_buf, s_buf, e_buf, es_buf, masks, gates, gmaps, nd, cms,
+       mal, batches, keys) -> (g_buf', x_q, scales, e_q, e_s, loss)
+
+    (``repro.core.round.make_flat_round`` with ``update_dtype`` != f32).
+    The int8/bf16 cohort pool and the error-feedback pool keep the
+    resident 2-D ``cohort_buffer_sharding`` layout; the small (m, S)
+    scale tables shard over ``data`` like every cohort-stacked argument.
+    All five donated pairs keep matching in/out shardings so XLA aliases
+    them (g_buf -> g_buf', c_buf -> x_q, s_buf -> scales, e_buf -> e_q,
+    es_buf -> e_s)."""
+    co, rep = cohort_sharding(mesh), replicated(mesh)
+    gl, cb = global_sharding(mesh), cohort_buffer_sharding(mesh)
+    return ((gl, cb, co, cb, co, co, co, co, co, co, co, co, co),
+            (gl, cb, co, cb, co, rep))
+
+
+def quantized_admit_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """(in_shardings, out_shardings) for the QUANTIZED async admit program
+
+      (g_buf, c_buf, s_buf, e_buf, es_buf, masks, gates, gmaps, cms, mal,
+       batches, keys, written) -> (c_buf', s_buf', e_buf', es_buf', losses)
+
+    (``repro.core.async_round.make_admit_program`` with a quantized
+    admission dtype): the layout story of ``async_admit_shardings`` with
+    the pool split into quantized rows + scales + error-feedback
+    residuals, every pool donated to its same-sharded output."""
+    co, gl = cohort_sharding(mesh), global_sharding(mesh)
+    cb = cohort_buffer_sharding(mesh)
+    return ((gl, cb, co, cb, co, co, co, co, co, co, co, co, co),
+            (cb, co, cb, co, co))
+
+
+def quantized_merge_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
+    """(in_shardings, out_shardings) for the QUANTIZED async merge program
+
+      (g_buf, c_buf, s_buf, masks, gates, gmaps, w) -> g_buf'
+
+    — ``async_merge_shardings`` plus the (m, S) scale table over ``data``;
+    the quantized pool is consumed in its resident 2-D layout by the
+    fused dequantize-aggregate."""
+    co, gl = cohort_sharding(mesh), global_sharding(mesh)
+    cb = cohort_buffer_sharding(mesh)
+    return ((gl, cb, co, co, co, co, co), gl)
+
+
 def async_admit_shardings(mesh: Mesh) -> Tuple[Tuple, Tuple]:
     """(in_shardings, out_shardings) for the async engine's admit program
 

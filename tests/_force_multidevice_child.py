@@ -35,6 +35,13 @@ admit contracts on the lowered programs (zero all-gathers in both — the
 admit is a slot-order select since PR 8 — plus the peak-live-bytes
 budgets), and the ``ResidentDriver._cbufs`` padded-key regression.
 Prints ``ASYNC OK``.
+
+With ``--quant`` it runs the quantized-admission cases under the 4-device
+data mesh: bf16/int8 sharded rounds stay within quantization drift of the
+sharded f32 round, and the ``ResidentDriver._cbufs`` dtype-key regression
+— one driver serving f32 AND int8 cohorts of the same padded size holds
+one pool per admission dtype and never donates across dtypes.  Prints
+``QUANT OK``.
 """
 import sys
 
@@ -330,7 +337,7 @@ if "--async" in sys.argv:
                            csh.global_sharding(MESH))
     _, batches3 = data_fn(0)
     g_buf, _ = driver.round(g_buf, SPECS, batches3, KEY)
-    cbuf_first = driver._cbufs[4]
+    cbuf_first = driver._cbufs[(4, "f32")]
     specs4, data_fn4 = make_cohort(CFG, 4, local_steps=E)
     _, batches4 = data_fn4(0)
     g_buf, _ = driver.round(g_buf, specs4, batches4, KEY)
@@ -338,10 +345,66 @@ if "--async" in sys.argv:
         f"expected one scratch buffer for padded m=4, got {driver._cbufs.keys()}"
     assert cbuf_first.is_deleted(), \
         "m=4 cohort did not donate the m=3 cohort's padded scratch buffer"
-    assert not driver._cbufs[4].is_deleted()
+    assert not driver._cbufs[(4, "f32")].is_deleted()
     print("cbufs padded-key ping-pong: OK")
 
     print("ASYNC OK")
+    sys.exit(0)
+
+
+if "--quant" in sys.argv:
+    import dataclasses
+
+    # --- quantized admission under the 4-device data mesh: the round
+    # trains at f32, quantizes the admitted rows with per-segment scales,
+    # and merges through the fused dequantize-accumulate; the merged
+    # global must stay within quantization drift of the sharded f32 round
+    # (error feedback keeps the bias from compounding)
+    fl32 = _fl("fedfa")
+    index = flat.get_index(PARAMS)
+    p_f32, _ = round_mod.run_rounds(PARAMS, CFG, fl32, 2, data_fn, KEY,
+                                    eval_every=0, mesh=MESH)
+    for dt, tol in (("bf16", 0.02), ("int8", 0.08)):
+        fl_q = dataclasses.replace(fl32, update_dtype=dt)
+        p_q, l_q = round_mod.run_rounds(PARAMS, CFG, fl_q, 2, data_fn, KEY,
+                                        eval_every=0, mesh=MESH)
+        assert all(np.isfinite(l_q)), l_q
+        num = den = 0.0
+        for a, b in zip(jax.tree.leaves(p_f32), jax.tree.leaves(p_q)):
+            num += float(np.sum((np.asarray(a) - np.asarray(b)) ** 2))
+            den += float(np.sum(np.asarray(a) ** 2))
+        drift = (num / max(den, 1e-30)) ** 0.5
+        assert drift < tol, (dt, drift)
+        print(f"quant sharded drift {dt}: {drift:.4f} OK")
+
+    # --- _cbufs dtype-key regression: ONE driver serving f32 and int8
+    # cohorts of the SAME padded size must hold one pool per admission
+    # dtype — an (m,)-keyed dict would hand the f32 scratch to the int8
+    # round (wrong dtype, wrong arity: the quantized state is a 4-tuple)
+    driver = round_mod.ResidentDriver(CFG, fl32, index, mesh=MESH)
+    g_buf = jax.device_put(flat.flatten(index, PARAMS),
+                           csh.global_sharding(MESH))
+    _, batches3 = data_fn(0)
+    g_buf, _ = driver.round(g_buf, SPECS, batches3, KEY)
+    cbuf_f32 = driver._cbufs[(4, "f32")]
+    driver.fl = dataclasses.replace(fl32, update_dtype="int8")
+    g_buf, _ = driver.round(g_buf, SPECS, batches3, KEY)
+    assert set(driver._cbufs) == {(4, "f32"), (4, "int8")}, \
+        f"expected dtype-keyed pools, got {driver._cbufs.keys()}"
+    assert not cbuf_f32.is_deleted(), \
+        "int8 round donated the f32 cohort scratch — dtype key collision"
+    st = driver._cbufs[(4, "int8")]
+    assert isinstance(st, tuple) and len(st) == 4, type(st)
+    assert st[0].dtype == jax.numpy.int8 and st[2].dtype == jax.numpy.int8
+    assert st[1].shape == (4, index.n_segments)
+    # the int8 pool ping-pongs independently of the f32 scratch
+    g_buf, _ = driver.round(g_buf, SPECS, batches3, KEY)
+    assert all(b.is_deleted() for b in st), \
+        "second int8 round did not donate the quantized 4-tuple state"
+    assert not cbuf_f32.is_deleted()
+    print("cbufs dtype-key ping-pong: OK")
+
+    print("QUANT OK")
     sys.exit(0)
 
 

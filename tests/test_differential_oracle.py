@@ -144,6 +144,140 @@ def test_async_merges_match_tree_oracle():
     assert saw_pregrafted  # the general bounded-staleness path was exercised
 
 
+def _rel_drift(a, b):
+    """Relative L2 distance between two pytrees/arrays (oracle in ``a``)."""
+    num = den = 0.0
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        num += float(np.sum((np.asarray(x, np.float32) -
+                             np.asarray(y, np.float32)) ** 2))
+        den += float(np.sum(np.asarray(x, np.float32) ** 2))
+    return (num / max(den, 1e-30)) ** 0.5
+
+
+@pytest.mark.parametrize("dt,bound", [("bf16", 0.03), ("int8", 0.08)])
+@pytest.mark.parametrize("seed", range(3))
+def test_quantized_aggregation_drift_vs_tree_oracle(seed, dt, bound):
+    """Quantized admission (grafted, density-masked rows quantized with
+    per-segment scales, fused dequantize in every consumer) stays within
+    quantization drift of the f32 tree oracle on randomized heterogeneous
+    cohorts — malicious +10 outliers included (``_random_cohort`` flags
+    ~30% of clients)."""
+    stacked, masks, gates, gmaps, nd = _random_cohort(seed)
+    index = flat.get_index(PARAMS)
+    g = flat.flatten(index, PARAMS)
+    x = flat.flatten_stacked(index, stacked)
+    x = jax.vmap(functools.partial(flat._graft_flat, index))(x, gmaps)
+    dens, _ = jax.vmap(
+        functools.partial(flat._density_and_fraction, CFG, index))(masks)
+    y = x * dens                              # what _round_q admits
+    x_q, scales = flat.quantize_cohort(index, y, dt)
+    out_q = flat.aggregate_buffers(
+        index, g, x_q, CFG, masks, gates, gmaps, nd, pregrafted=True,
+        scales=scales, use_kernel=True, interpret=True,
+        **fedfa.STRATEGIES["fedfa"])
+    # oracle: the tree engine on the same pre-grafted f32 rows (identity
+    # graft maps keep graft-on weighting without permuting again)
+    rows = [flat.unflatten(index, y[i]) for i in range(y.shape[0])]
+    stacked_g = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+    gmaps_id = jnp.broadcast_to(jnp.arange(gmaps.shape[1]), gmaps.shape)
+    out_tree = fedfa.aggregate(PARAMS, stacked_g, CFG, masks, gates,
+                               gmaps_id, nd, engine="tree",
+                               **fedfa.STRATEGIES["fedfa"])
+    drift = _rel_drift(out_tree, flat.unflatten(index, out_q))
+    assert drift < bound, (dt, seed, drift)
+
+
+@pytest.mark.parametrize("dt,bound", [("bf16", 0.02), ("int8", 0.08)])
+def test_quantized_error_feedback_converges(dt, bound):
+    """Multi-round sweep: with server-side error feedback the quantized
+    resident trajectory stays within epsilon of the f32 trajectory after 6
+    rounds — the per-round quantization residual must not compound."""
+    import dataclasses
+
+    from conftest import make_cohort
+    from repro.core import round as round_mod
+    from repro.core.server import FLConfig
+
+    fl = FLConfig(local_steps=2, lr=0.05, strategy="fedfa", task="cls",
+                  agg_engine="flat")
+    _, data_fn = make_cohort(CFG, 3, local_steps=2, malicious_frac=0.34)
+    key = jax.random.PRNGKey(9)
+    p_f32, l_f32 = round_mod.run_rounds(PARAMS, CFG, fl, 6, data_fn, key,
+                                        eval_every=0)
+    fl_q = dataclasses.replace(fl, update_dtype=dt)
+    p_q, l_q = round_mod.run_rounds(PARAMS, CFG, fl_q, 6, data_fn, key,
+                                    eval_every=0)
+    assert np.isfinite(l_q).all(), l_q
+    drift = _rel_drift(p_f32, p_q)
+    assert drift < bound, (dt, drift)
+
+
+def test_quantized_async_merges_match_tree_oracle():
+    """Async quantized admission: every bounded-staleness merge,
+    re-aggregated by the TREE engine from the engine's own dequantized
+    pool snapshot, must reproduce the merged global — the fused
+    dequantize-accumulate and the explicit dequantize agree merge by
+    merge (the density 0/1 mask is baked into the stored rows, so the
+    oracle's re-application is idempotent)."""
+    import dataclasses
+
+    from conftest import assert_tree_allclose, make_cohort
+    from repro.core.async_round import AsyncConfig, run_async
+    from repro.core.server import FLConfig, stack_runtimes
+    from repro.sim import TraceSource
+
+    fl = FLConfig(local_steps=2, lr=0.05, strategy="fedfa", task="cls",
+                  agg_engine="flat", update_dtype="int8")
+    index = flat.get_index(PARAMS)
+    _, data_fn = make_cohort(CFG, 4, local_steps=2, malicious_frac=0.3)
+    rec = []
+    run_async(PARAMS, CFG, fl, 3,
+              TraceSource(data_fn, lambda i: 20.0 if i % 4 == 3 else 1.0),
+              jax.random.PRNGKey(3),
+              acfg=AsyncConfig(capacity=4, merge_k=2, staleness_max=3),
+              eval_every=0, on_merge=rec.append)
+    assert rec, "skewed trace produced no merges"
+    kw = fedfa.STRATEGIES[fl.strategy]
+    for info in rec:
+        assert info["pregrafted"]
+        g_before = flat.unflatten(index, jnp.asarray(info["g_before"]))
+        rows = [flat.unflatten(index, jnp.asarray(r)) for r in info["x"]]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        masks, gates, gmaps, _, _, _ = stack_runtimes(CFG, info["specs"])
+        gmaps = jnp.broadcast_to(jnp.arange(gmaps.shape[1]), gmaps.shape)
+        out_tree = fedfa.aggregate(g_before, stacked, CFG, masks, gates,
+                                   gmaps, jnp.asarray(info["w"]),
+                                   engine="tree", **kw)
+        assert_tree_allclose(
+            out_tree, flat.unflatten(index, jnp.asarray(info["g_after"])),
+            rtol=5e-4, atol=5e-5)
+
+
+def test_backdoor_robustness_row_int8():
+    """Table-1-style robustness row at int8 admission: the clean-vs-
+    attacked accuracy drop under the lambda=20 label-shuffle attack must
+    survive quantization — int8's drop tracks f32's and the attacked int8
+    run keeps a usable global (quantized admission must not hand the
+    attacker a new amplification channel)."""
+    from repro.launch.train import run_fl
+
+    accs = {}
+    for dt in ("f32", "int8"):
+        for attack, frac in (("clean", 0.0), ("attacked", 0.4)):
+            h = run_fl("smollm-135m", 4, 5, strategy="fedfa",
+                       malicious_frac=frac, attack_lambda=20.0,
+                       local_steps=1, batch=2, seq_len=8,
+                       participation=1.0, eval_every=0, seed=0,
+                       update_dtype=dt, quiet=True)
+            assert np.isfinite(h["loss"]).all(), (dt, attack, h["loss"])
+            accs[(dt, attack)] = h["final_acc"]
+    drop_f32 = accs[("f32", "clean")] - accs[("f32", "attacked")]
+    drop_int8 = accs[("int8", "clean")] - accs[("int8", "attacked")]
+    assert abs(drop_int8 - drop_f32) <= 0.25, (drop_f32, drop_int8, accs)
+    assert accs[("int8", "attacked")] >= accs[("f32", "attacked")] - 0.25, \
+        accs
+
+
 @pytest.mark.parametrize("seed", range(3))
 def test_kernelized_cohort_norms_match_reference(seed):
     """The fused Pallas trimmed-norm pass (use_kernel=True, interpret=True:

@@ -188,6 +188,15 @@ def test_async_forced_multidevice():
     assert "ASYNC OK" in _run_forced_multidevice_child("--async")
 
 
+def test_quantized_forced_multidevice():
+    """Quantized admission on 4 forced CPU devices: bf16/int8 sharded
+    rounds stay within quantization drift of the sharded f32 round, and
+    the ResidentDriver._cbufs dtype-key regression — one driver serving
+    f32 and int8 cohorts of the same padded size keeps one pool per
+    admission dtype and never donates across dtypes."""
+    assert "QUANT OK" in _run_forced_multidevice_child("--quant")
+
+
 # ---------------------------------------------------------------------------
 # N-padding (host-side, no mesh needed)
 # ---------------------------------------------------------------------------
